@@ -1,0 +1,75 @@
+"""Fig. 9: wall-clock latency of DSM operations (MOVE + MERGE workloads).
+
+Each strategy applies the same generated workload on its own copy of the
+hierarchy; latency distribution over successful ops (skips are ops whose
+source vanished through earlier merges — identical across strategies)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import paths as P
+
+from .common import SCALE, build_index, datasets, pct
+
+
+def _subtree_dirs(idx, src: str) -> int:
+    """Strategy-agnostic m_u: number of directory keys in the subtree."""
+    path = P.parse(src)
+    if hasattr(idx, "aux"):
+        return len(idx.aux.subtree_keys(path))
+    node = idx._walk(path, create=False)
+    if node is None:
+        raise KeyError(src)
+    count, stack = 0, [node]
+    while stack:
+        n = stack.pop()
+        count += 1
+        stack.extend(n.children.values())
+    return count
+
+
+def run(scale: float = SCALE) -> List[Dict]:
+    rows = []
+    for ds_name, ds in datasets(scale).items():
+        for strat in ("pe_online", "pe_offline", "triehi"):
+            for kind, workload in (("move", ds.moves), ("merge", ds.merges)):
+                idx = build_index(strat, ds)
+                lat, sizes = [], []
+                applied = 0
+                for src, dst in workload:
+                    try:
+                        m_u = _subtree_dirs(idx, src)
+                        t0 = time.perf_counter_ns()
+                        if kind == "move":
+                            idx.move(src, dst)
+                        else:
+                            idx.merge(src, dst)
+                        lat.append((time.perf_counter_ns() - t0) / 1e3)
+                        sizes.append(m_u)
+                        applied += 1
+                    except (KeyError, ValueError):
+                        continue
+                idx.check_invariants()
+                p = pct(lat)
+                # split into small/large-subtree buckets when m_u is known
+                big = [l for l, s_ in zip(lat, sizes) if s_ >= 50]
+                small = [l for l, s_ in zip(lat, sizes) if 0 <= s_ < 50]
+                extra = ""
+                if big and small:
+                    extra = (f";small_mu_us={np.mean(small):.1f}"
+                             f";large_mu_us={np.mean(big):.1f}")
+                rows.append({
+                    "name": f"fig9/{ds_name}/{kind}/{strat}",
+                    "us_per_call": p["mean"],
+                    "derived": (f"applied={applied};p95={p['p95']:.1f};"
+                                f"p99={p['p99']:.1f}" + extra),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,59 @@
+"""Shared benchmark helpers: dataset twins at benchmark scale, timing,
+percentiles, CSV emission (``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import STRATEGIES, make_scope_index
+from repro.datasets import make_arxiv_dir, make_wiki_dir
+
+SCALE = 0.01          # of the published dataset sizes; override via env/CLI
+DIM = 64
+
+
+def datasets(scale: float = SCALE, dim: int = DIM):
+    return {
+        "WIKI-Dir": make_wiki_dir(scale=scale, dim=dim, n_queries=64, seed=0),
+        "ARXIV-Dir": make_arxiv_dir(scale=scale, dim=dim, n_queries=64,
+                                    seed=1),
+    }
+
+
+def build_index(strategy: str, ds):
+    idx = make_scope_index(strategy)
+    for d in ds.dirs:
+        idx.mkdir(d)
+    for eid, path in enumerate(ds.entry_paths):
+        idx.insert(eid, path)
+    return idx
+
+
+def pct(xs: Sequence[float]) -> Dict[str, float]:
+    a = np.asarray(sorted(xs))
+    if len(a) == 0:
+        return {k: float("nan") for k in ("mean", "p50", "p90", "p95",
+                                          "p99", "p999")}
+    return {
+        "mean": float(a.mean()),
+        "p50": float(np.percentile(a, 50)),
+        "p90": float(np.percentile(a, 90)),
+        "p95": float(np.percentile(a, 95)),
+        "p99": float(np.percentile(a, 99)),
+        "p999": float(np.percentile(a, 99.9)),
+    }
+
+
+def time_us(fn: Callable, *args, repeat: int = 1) -> float:
+    t0 = time.perf_counter_ns()
+    for _ in range(repeat):
+        fn(*args)
+    return (time.perf_counter_ns() - t0) / 1e3 / repeat
+
+
+def emit(rows: List[Dict], name_key: str = "name",
+         us_key: str = "us_per_call", derived_key: str = "derived") -> None:
+    for r in rows:
+        print(f"{r[name_key]},{r[us_key]:.2f},{r.get(derived_key, '')}")

@@ -1,0 +1,60 @@
+"""Benchmark driver: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--scale 0.01] [--skip roofline]``
+prints ``name,us_per_call,derived`` CSV rows for every benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01,
+                    help="fraction of published dataset sizes")
+    ap.add_argument("--only", default="",
+                    help="comma list: dsq,e2e,dsm,build,depth,openviking,"
+                         "roofline,kernels")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    from . import (bench_build, bench_depth, bench_dsm, bench_dsq_e2e,
+                   bench_dsq_latency, bench_kernels, bench_openviking,
+                   bench_roofline)
+    from .common import emit
+
+    sections = [
+        ("dsq", "Table IV: directory-only latency",
+         lambda: bench_dsq_latency.run(args.scale)),
+        ("e2e", "Fig 7/8: DSQ quality vs latency",
+         lambda: bench_dsq_e2e.run(args.scale)),
+        ("dsm", "Fig 9: DSM MOVE/MERGE latency",
+         lambda: bench_dsm.run(args.scale)),
+        ("build", "Table V: index build time/size",
+         lambda: bench_build.run(args.scale)),
+        ("depth", "Fig 10-12: depth sensitivity + decomposition",
+         lambda: bench_depth.run(args.scale)),
+        ("openviking", "Table VI/VII proxy: scoped vs unscoped QA retrieval",
+         lambda: bench_openviking.run()),
+        ("roofline", "§Roofline: dry-run derived terms (16x16 baseline)",
+         lambda: bench_roofline.run()),
+        ("kernels", "Pallas kernel microbench (interpret mode)",
+         lambda: bench_kernels.run()),
+    ]
+    print("name,us_per_call,derived")
+    for key, title, fn in sections:
+        if only and key not in only:
+            continue
+        print(f"# --- {title}", flush=True)
+        t0 = time.time()
+        try:
+            emit(fn())
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{key},nan,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+        print(f"# --- {title} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

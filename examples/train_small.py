@@ -1,0 +1,22 @@
+"""Train a small LM for a few hundred steps with checkpoint-restart.
+
+    PYTHONPATH=src python examples/train_small.py            # CPU-sized
+    PYTHONPATH=src python examples/train_small.py --full     # mamba2-130m
+
+(Thin wrapper over repro.launch.train so the example and the production
+launcher share one code path.)
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    full = "--full" in sys.argv
+    argv = [a for a in sys.argv[1:] if a != "--full"]
+    defaults = (["--arch", "mamba2-130m", "--steps", "300", "--batch", "8",
+                 "--seq", "512"] if full else
+                ["--arch", "mamba2-130m", "--smoke", "--steps", "200",
+                 "--batch", "8", "--seq", "128"])
+    sys.argv = [sys.argv[0]] + defaults + ["--ckpt-dir", "/tmp/repro_ckpt",
+                                           "--log-every", "20"] + argv
+    train.main()

@@ -1,0 +1,15 @@
+"""repro — Directory-Aware Query and Maintenance in Vector Databases (TrieHI)
+reproduced + extended as a multi-pod JAX training/serving framework.
+
+Subpackages (import what you need; none import jax device state at top level):
+  repro.core        DSQ/DSM + PE-ONLINE / PE-OFFLINE / TrieHI scope indexes
+  repro.vectordb    flat / IVF / proximity-graph executors + facade
+  repro.kernels     Pallas TPU kernels (+ jnp oracles)
+  repro.models      the 10 assigned architectures
+  repro.training    optimizer / data / checkpoint / train_step
+  repro.serving     tiered context DB + scoped RAG serving
+  repro.distributed pod-sharded scoped search
+  repro.launch      mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,123 @@
+"""ScopeIndex — the pluggable directory-semantic layer contract (§II-D).
+
+Every strategy (PE-ONLINE, PE-OFFLINE, TRIEHI) implements this interface. The
+ANN executor only ever sees the resolved :class:`RoaringBitmap` candidate set,
+which is what makes the layer ANN-index independent (design requirement 4).
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from . import paths as P
+from .catalog import Catalog
+from .idset import RoaringBitmap
+
+
+@dataclass
+class ResolveStats:
+    """Per-stage directory-only timing/counters (Fig. 12 decomposition)."""
+
+    subpath_keys: int = 0          # m_q: directory keys enumerated (PE-ONLINE)
+    posting_fetches: int = 0       # posting-list / aggregate-set reads
+    set_ops: int = 0               # unions/differences performed
+    node_visits: int = 0           # trie node visits (TrieHI) / key probes
+    stage_ns: Dict[str, int] = field(default_factory=dict)
+
+
+class ScopeIndex(abc.ABC):
+    """Directory scope-resolution index above the ANN executor."""
+
+    name: str = "abstract"
+
+    def __init__(self):
+        self.catalog = Catalog()
+
+    # ------------------------------------------------------------ write path
+    @abc.abstractmethod
+    def mkdir(self, path: P.Path | str) -> None:
+        """Register a directory (and its ancestors) without any entry."""
+
+    @abc.abstractmethod
+    def insert(self, entry_id: int, dir_path: P.Path | str) -> None:
+        """Bind a vectorized entry to its logical parent directory."""
+
+    def bulk_insert(self, entry_ids, dir_paths) -> None:
+        """Batch ingestion: group entries by directory and use vectorized
+        bitmap updates (production ingestion path; subclasses override)."""
+        for eid, path in zip(entry_ids, dir_paths):
+            self.insert(int(eid), path)
+
+    @abc.abstractmethod
+    def delete(self, entry_id: int) -> None:
+        """Remove an entry from the index (uses the catalog)."""
+
+    # ------------------------------------------------------------- read path
+    @abc.abstractmethod
+    def resolve(self, path: P.Path | str, recursive: bool = True,
+                stats: Optional[ResolveStats] = None) -> RoaringBitmap:
+        """DSQ scope resolution -> candidate entry-ID set."""
+
+    # ------------------------------------------------------------------ DSM
+    @abc.abstractmethod
+    def move(self, src: P.Path | str, new_parent: P.Path | str) -> None:
+        """Relocate subtree ``src`` to become a child of ``new_parent``."""
+
+    @abc.abstractmethod
+    def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
+        """Merge subtree ``src`` into existing subtree ``dst`` (recursive
+        name-conflict reconciliation); ``src`` ceases to exist."""
+
+    # ------------------------------------------------------------ inspection
+    @abc.abstractmethod
+    def has_dir(self, path: P.Path | str) -> bool: ...
+
+    @abc.abstractmethod
+    def list_dirs(self) -> List[P.Path]:
+        """All directory paths currently registered (test/debug)."""
+
+    @abc.abstractmethod
+    def memory_bytes(self) -> int:
+        """Directory-module resident bytes (catalog excluded, per §V-A)."""
+
+    @abc.abstractmethod
+    def check_invariants(self) -> None:
+        """Raise AssertionError when internal invariants are violated."""
+
+    # ------------------------------------------------------------- utilities
+    def entry_dir(self, entry_id: int) -> Optional[P.Path]:
+        """Current logical directory of an entry, via the shared catalog."""
+        ref = self.catalog.get(entry_id)
+        if ref is None:
+            return None
+        return self._ref_path(ref)
+
+    @abc.abstractmethod
+    def _ref_path(self, ref: object) -> P.Path: ...
+
+    def resolve_pattern(self, pattern: P.Path | str, recursive: bool = True,
+                        stats: Optional[ResolveStats] = None) -> RoaringBitmap:
+        """Derived DSQ (§IV-A "Derived Path Patterns", the paper's named
+        future work): resolve a path with ``*`` wildcard segments, e.g.
+        ``/users/*/sessions/s3/``. Default implementation scans all directory
+        keys (what a flat path-string store must do); TrieHI overrides with a
+        branch-pruned trie traversal."""
+        pat = P.parse(pattern)
+        out = RoaringBitmap()
+        for d in self.list_dirs():
+            if len(d) != len(pat):
+                continue
+            if all(ps == "*" or ps == ds for ps, ds in zip(pat, d)):
+                out |= self.resolve(d, recursive=recursive, stats=stats)
+        return out
+
+    def resolve_exclusion(self, path: P.Path | str, exclude: List[P.Path | str],
+                          recursive: bool = True,
+                          stats: Optional[ResolveStats] = None) -> RoaringBitmap:
+        """Derived DSQ: scope(path) minus the recursive scopes of ``exclude``
+        branches (§II-C: exclusion = subtracting a branch's recursive scope)."""
+        scope = self.resolve(path, recursive=recursive, stats=stats)
+        for ex in exclude:
+            scope -= self.resolve(ex, recursive=True, stats=stats)
+        return scope

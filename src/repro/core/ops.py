@@ -1,0 +1,157 @@
+"""DSQ / DSM operator layer (§II-C) with the consistency protocol of §IV-A.
+
+* :class:`DSQ` — declarative query op: anchor path, recursive flag, exclusion
+  branches, top-k; resolved against any :class:`ScopeIndex` into a candidate
+  entry-ID set for the ANN executor.
+* :class:`DSM` — declarative structural mutation (MOVE / MERGE / MKDIR /
+  REMOVE), applied under a prefix-region lock with a write-ahead journal so a
+  crashed mutation can be detected and replayed/rolled forward on restart.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from . import paths as P
+from .idset import RoaringBitmap
+from .interface import ResolveStats, ScopeIndex
+
+
+# --------------------------------------------------------------------- DSQ
+@dataclass(frozen=True)
+class DSQ:
+    path: str
+    recursive: bool = True
+    exclude: Tuple[str, ...] = ()
+    k: int = 10
+
+    def resolve(self, index: ScopeIndex,
+                stats: Optional[ResolveStats] = None) -> RoaringBitmap:
+        if self.exclude:
+            return index.resolve_exclusion(
+                self.path, list(self.exclude), recursive=self.recursive,
+                stats=stats)
+        return index.resolve(self.path, recursive=self.recursive, stats=stats)
+
+
+# --------------------------------------------------------------------- DSM
+@dataclass(frozen=True)
+class DSM:
+    kind: str                 # "move" | "merge" | "mkdir"
+    src: str
+    dst: str = ""             # move: new parent; merge: target subtree
+
+    def affected_region(self) -> List[P.Path]:
+        """Prefix regions this mutation touches (for overlap serialization):
+        move covers the source subtree + destination path; merge covers the
+        source and target subtrees (§IV-A Consistency During Updates)."""
+        regions = [P.parse(self.src)]
+        if self.dst:
+            regions.append(P.parse(self.dst))
+        return regions
+
+    def apply(self, index: ScopeIndex) -> None:
+        if self.kind == "move":
+            index.move(self.src, self.dst)
+        elif self.kind == "merge":
+            index.merge(self.src, self.dst)
+        elif self.kind == "mkdir":
+            index.mkdir(self.src)
+        else:
+            raise ValueError(f"unknown DSM kind {self.kind!r}")
+
+
+def regions_overlap(a: Sequence[P.Path], b: Sequence[P.Path]) -> bool:
+    """Two mutations conflict when any affected prefix regions are nested."""
+    for ra in a:
+        for rb in b:
+            if P.is_ancestor(ra, rb) or P.is_ancestor(rb, ra):
+                return True
+    return False
+
+
+class RegionLockManager:
+    """Serializes DSM ops on overlapping trie regions; disjoint regions may
+    proceed concurrently (the paper serializes overlapping paths only)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._held: List[Tuple[int, List[P.Path]]] = []
+        self._next = 0
+
+    def acquire(self, regions: List[P.Path]) -> int:
+        with self._cond:
+            token = self._next
+            self._next += 1
+            while any(regions_overlap(regions, held) for _, held in self._held):
+                self._cond.wait()
+            self._held.append((token, regions))
+            return token
+
+    def release(self, token: int) -> None:
+        with self._cond:
+            self._held = [(t, r) for t, r in self._held if t != token]
+            self._cond.notify_all()
+
+
+class DSMJournal:
+    """Write-ahead intent journal: BEGIN is durable before the mutation runs,
+    COMMIT after. Recovery surfaces uncommitted ops for replay."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._mem: List[dict] = []
+
+    def _write(self, rec: dict) -> None:
+        rec["ts"] = time.time()
+        self._mem.append(rec)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+
+    def begin(self, op: DSM) -> int:
+        seq = len(self._mem)
+        self._write({"event": "begin", "seq": seq, "kind": op.kind,
+                     "src": op.src, "dst": op.dst})
+        return seq
+
+    def commit(self, seq: int) -> None:
+        self._write({"event": "commit", "seq": seq})
+
+    @staticmethod
+    def recover(path: str) -> List[DSM]:
+        """Return ops whose BEGIN has no matching COMMIT (crash suspects)."""
+        begun, committed = {}, set()
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                if rec["event"] == "begin":
+                    begun[rec["seq"]] = DSM(rec["kind"], rec["src"], rec["dst"])
+                elif rec["event"] == "commit":
+                    committed.add(rec["seq"])
+        return [op for seq, op in begun.items() if seq not in committed]
+
+
+class DSMExecutor:
+    """Applies DSM ops with region locking + journaling, in the fixed order
+    of §IV-A: lock region -> journal BEGIN -> mutate (collect affected set,
+    relink, refresh catalog/aggregates inside the index) -> journal COMMIT."""
+
+    def __init__(self, index: ScopeIndex, journal: Optional[DSMJournal] = None):
+        self.index = index
+        self.journal = journal or DSMJournal()
+        self.locks = RegionLockManager()
+
+    def apply(self, op: DSM) -> None:
+        token = self.locks.acquire(op.affected_region())
+        try:
+            seq = self.journal.begin(op)
+            op.apply(self.index)
+            self.journal.commit(seq)
+        finally:
+            self.locks.release(token)

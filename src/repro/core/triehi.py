@@ -1,0 +1,347 @@
+"""TRIEHI — Trie-based Hierarchical Index (§IV, the paper's core contribution).
+
+The directory topology is kept as a native prefix tree. Each directory is a
+TrieNode with a stable identity, and the node maintains the aggregate invariant
+
+    Inc(v) = Local(v)  ∪  ⋃_{w ∈ Child(v)} Inc(w)                    (Eq. 1)
+
+so a node is a *reusable materialized scope*: recursive DSQ reads one aggregate
+after an O(t) traversal, MOVE relinks a subtree root and touches only the
+ancestor chains whose descendant membership changed, and MERGE reconciles
+conflicts node-locally while relinking non-conflicting subtrees as whole units.
+
+Catalog note: entries are bound to TrieNode objects. A node dissolved by MERGE
+leaves a forwarding pointer (union-find style, with path compression) so that
+entry->node catalog resolution stays O(α) without per-entry rewrites.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from . import paths as P
+from .idset import RoaringBitmap
+from .interface import ResolveStats, ScopeIndex
+
+
+class TrieNode:
+    __slots__ = ("segment", "parent", "children", "inclusive", "local", "forward")
+
+    def __init__(self, segment: str, parent: Optional["TrieNode"]):
+        self.segment = segment
+        self.parent = parent
+        self.children: Dict[str, TrieNode] = {}
+        self.inclusive = RoaringBitmap()   # Inc(v): entries at-or-below v
+        self.local = RoaringBitmap()       # Local(v): entries directly at v
+        self.forward: Optional[TrieNode] = None  # set when dissolved by MERGE
+
+    def path(self) -> P.Path:
+        segs: List[str] = []
+        node: Optional[TrieNode] = self
+        while node is not None and node.parent is not None:
+            segs.append(node.segment)
+            node = node.parent
+        return tuple(reversed(segs))
+
+    def resolve_forward(self) -> "TrieNode":
+        node = self
+        while node.forward is not None:
+            node = node.forward
+        # path compression
+        cur = self
+        while cur.forward is not None and cur.forward is not node:
+            nxt = cur.forward
+            cur.forward = node
+            cur = nxt
+        return node
+
+    def __repr__(self) -> str:
+        return f"TrieNode({P.to_str(self.path())}, inc={len(self.inclusive)})"
+
+
+class TrieHIIndex(ScopeIndex):
+    name = "triehi"
+
+    def __init__(self):
+        super().__init__()
+        self.root = TrieNode("", None)
+        self._n_dirs = 1
+
+    # ------------------------------------------------------------ traversal
+    def _walk(self, path: P.Path, create: bool = False,
+              stats: Optional[ResolveStats] = None) -> Optional[TrieNode]:
+        node = self.root
+        visits = 1
+        for seg in path:
+            child = node.children.get(seg)
+            if child is None:
+                if not create:
+                    if stats is not None:
+                        stats.node_visits += visits
+                    return None
+                child = TrieNode(seg, node)
+                node.children[seg] = child
+                self._n_dirs += 1
+            node = child
+            visits += 1
+        if stats is not None:
+            stats.node_visits += visits
+        return node
+
+    def _ancestor_chain(self, node: TrieNode) -> List[TrieNode]:
+        """Proper ancestors, nearest first (excludes ``node`` itself)."""
+        out = []
+        cur = node.parent
+        while cur is not None:
+            out.append(cur)
+            cur = cur.parent
+        return out
+
+    # ---------------------------------------------------------------- write
+    def mkdir(self, path: P.Path | str) -> None:
+        self._walk(P.parse(path), create=True)
+
+    def insert(self, entry_id: int, dir_path: P.Path | str) -> None:
+        node = self._walk(P.parse(dir_path), create=True)
+        assert node is not None
+        node.local.add(entry_id)
+        # O(t) aggregate updates up the ancestor chain (ingestion, Table II)
+        cur: Optional[TrieNode] = node
+        while cur is not None:
+            cur.inclusive.add(entry_id)
+            cur = cur.parent
+        self.catalog.bind(entry_id, node)
+
+    def bulk_insert(self, entry_ids, dir_paths) -> None:
+        import numpy as np
+        groups = {}
+        for eid, path in zip(entry_ids, dir_paths):
+            groups.setdefault(P.parse(path), []).append(eid)
+        for path, ids in groups.items():
+            node = self._walk(path, create=True)
+            arr = np.asarray(ids, np.uint32)
+            node.local.add_many(arr)
+            cur = node
+            while cur is not None:
+                cur.inclusive.add_many(arr)
+                cur = cur.parent
+            self.catalog._map.update((int(e), node) for e in ids)
+
+    def delete(self, entry_id: int) -> None:
+        ref = self.catalog.get(entry_id)
+        if ref is None:
+            raise KeyError(entry_id)
+        node = ref.resolve_forward()
+        node.local.remove(entry_id)
+        cur: Optional[TrieNode] = node
+        while cur is not None:
+            cur.inclusive.remove(entry_id)
+            cur = cur.parent
+        self.catalog.unbind(entry_id)
+
+    # ----------------------------------------------------------------- read
+    def resolve(self, path: P.Path | str, recursive: bool = True,
+                stats: Optional[ResolveStats] = None) -> RoaringBitmap:
+        t0 = time.perf_counter_ns()
+        node = self._walk(P.parse(path), create=False, stats=stats)
+        t1 = time.perf_counter_ns()
+        if stats is not None:
+            stats.stage_ns["traverse"] = stats.stage_ns.get("traverse", 0) + t1 - t0
+        if node is None:
+            return RoaringBitmap()
+        if recursive:
+            out = node.inclusive.copy()
+            t2 = time.perf_counter_ns()
+            if stats is not None:
+                stats.posting_fetches += 1
+                stats.stage_ns["bitmap_fetch"] = (
+                    stats.stage_ns.get("bitmap_fetch", 0) + t2 - t1)
+            return out
+        # non-recursive: Inc(p) \ union(Inc(children)) (paper-faithful; equals
+        # Local(p) by Eq. 1 — asserted in check_invariants)
+        children = RoaringBitmap()
+        for child in node.children.values():
+            children |= child.inclusive
+        out = node.inclusive - children
+        t2 = time.perf_counter_ns()
+        if stats is not None:
+            stats.posting_fetches += 1 + len(node.children)
+            stats.set_ops += len(node.children) + 1
+            stats.stage_ns["bitmap_compute"] = (
+                stats.stage_ns.get("bitmap_compute", 0) + t2 - t1)
+        return out
+
+    # ------------------------------------------------------------------ DSM
+    @staticmethod
+    def _split_chains(a: List[TrieNode], b: List[TrieNode]
+                      ) -> Tuple[List[TrieNode], List[TrieNode]]:
+        """Drop the common suffix (shared ancestors) of two root-terminated
+        ancestor chains; returns (a_only, b_only)."""
+        ai, bi = len(a), len(b)
+        while ai > 0 and bi > 0 and a[ai - 1] is b[bi - 1]:
+            ai -= 1
+            bi -= 1
+        return a[:ai], b[:bi]
+
+    def move(self, src: P.Path | str, new_parent: P.Path | str) -> None:
+        src_p = P.parse(src)
+        np_p = P.parse(new_parent)
+        if not src_p:
+            raise ValueError("cannot move root")
+        s = self._walk(src_p, create=False)
+        if s is None:
+            raise KeyError(P.to_str(src_p))
+        if P.is_ancestor(src_p, np_p):
+            raise ValueError("cannot move a subtree into itself")
+        dest = self._walk(np_p, create=True)
+        assert dest is not None
+        if s.segment in dest.children:
+            raise ValueError(
+                f"{P.to_str(np_p + (s.segment,))} exists; use merge()")
+        agg = s.inclusive
+        old_chain = self._ancestor_chain(s)              # proper ancestors of s
+        new_chain = [dest] + self._ancestor_chain(dest)  # dest + its ancestors
+        old_only, new_only = self._split_chains(old_chain, new_chain)
+        for anc in old_only:
+            anc.inclusive -= agg
+        for anc in new_only:
+            anc.inclusive |= agg
+        # relink: one child-map delete, one insert, one parent pointer update.
+        # Independent of the number of descendant directories.
+        assert s.parent is not None
+        del s.parent.children[s.segment]
+        dest.children[s.segment] = s
+        s.parent = dest
+
+    def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
+        src_p, dst_p = P.parse(src), P.parse(dst)
+        if not src_p or not dst_p:
+            raise ValueError("cannot merge the root directory")
+        s = self._walk(src_p, create=False)
+        if s is None:
+            raise KeyError(P.to_str(src_p))
+        d = self._walk(dst_p, create=False)
+        if d is None:
+            raise KeyError(P.to_str(dst_p))
+        P.validate_disjoint(src_p, dst_p)
+        agg = s.inclusive
+        # ancestor aggregates: S leaves old-only proper ancestors of s, enters
+        # d and new-only proper ancestors of d; common ancestors unchanged.
+        old_chain = self._ancestor_chain(s)
+        new_chain = [d] + self._ancestor_chain(d)
+        old_only, new_only = self._split_chains(old_chain, new_chain)
+        for anc in old_only:
+            anc.inclusive -= agg
+        for anc in new_only:
+            anc.inclusive |= agg
+        # detach s, then reconcile topology below s and d
+        assert s.parent is not None
+        del s.parent.children[s.segment]
+        self._reconcile(s, d)
+
+    def _reconcile(self, a: TrieNode, b: TrieNode) -> None:
+        """Dissolve node ``a`` into node ``b``. Aggregates above b already
+        account for Inc(a); b.inclusive includes Inc(a) as well. Work is
+        node-level: non-conflicting children relink as whole units (r counts
+        only the conflicting nodes visited)."""
+        b.local |= a.local
+        for name, ca in list(a.children.items()):
+            cb = b.children.get(name)
+            if cb is None:
+                # relink whole subtree as a unit: O(1) topology update
+                b.children[name] = ca
+                ca.parent = b
+            else:
+                cb.inclusive |= ca.inclusive
+                self._reconcile(ca, cb)
+        a.children.clear()
+        a.forward = b           # catalog forwarding for entries bound to a
+        a.parent = None
+        self._n_dirs -= 1
+
+    def resolve_pattern(self, pattern: P.Path | str, recursive: bool = True,
+                        stats: Optional[ResolveStats] = None) -> RoaringBitmap:
+        """Wildcard DSQ, natively: ``*`` matches any child name at that level;
+        traversal continues only along matching branches (the structural
+        advantage over scanning flat path strings, §IV-A)."""
+        pat = P.parse(pattern)
+        frontier = [self.root]
+        visits = 1
+        for seg in pat:
+            nxt = []
+            for node in frontier:
+                if seg == "*":
+                    nxt.extend(node.children.values())
+                else:
+                    child = node.children.get(seg)
+                    if child is not None:
+                        nxt.append(child)
+            visits += len(nxt)
+            frontier = nxt
+            if not frontier:
+                break
+        if stats is not None:
+            stats.node_visits += visits
+        out = RoaringBitmap()
+        for node in frontier:
+            if recursive:
+                out |= node.inclusive
+            else:
+                children = RoaringBitmap.union_many(
+                    c.inclusive for c in node.children.values())
+                out |= node.inclusive - children
+        return out
+
+    # ------------------------------------------------------------ inspection
+    def has_dir(self, path: P.Path | str) -> bool:
+        return self._walk(P.parse(path), create=False) is not None
+
+    def list_dirs(self) -> List[P.Path]:
+        out: List[P.Path] = []
+        stack: List[Tuple[TrieNode, P.Path]] = [(self.root, P.ROOT)]
+        while stack:
+            node, path = stack.pop()
+            out.append(path)
+            for name, child in node.children.items():
+                stack.append((child, path + (name,)))
+        return out
+
+    def iter_nodes(self) -> Iterator[TrieNode]:
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    def memory_bytes(self) -> int:
+        total = 0
+        for node in self.iter_nodes():
+            total += 120 + len(node.segment) + 49       # node object + segment
+            total += 64 * len(node.children)            # child map slots
+            total += node.inclusive.memory_bytes()      # per-node aggregate
+            total += node.local.memory_bytes()
+        return total
+
+    def _ref_path(self, ref: object) -> P.Path:
+        return ref.resolve_forward().path()  # type: ignore[attr-defined]
+
+    def check_invariants(self) -> None:
+        # Eq. 1 at every node, bottom-up; Local == Inc \ union(child Inc)
+        def rec(node: TrieNode) -> RoaringBitmap:
+            child_union = RoaringBitmap()
+            for child in node.children.values():
+                assert child.parent is node, "broken parent pointer"
+                child_union |= rec(child)
+            want = node.local | child_union
+            assert want == node.inclusive, (
+                f"Eq.1 violated at {P.to_str(node.path())}: "
+                f"inc={len(node.inclusive)} want={len(want)}")
+            nonrec = node.inclusive - child_union
+            assert nonrec == node.local, "non-recursive != Local"
+            return node.inclusive
+        rec(self.root)
+        # catalog binds resolve to live nodes holding the entry
+        for eid, ref in self.catalog.items():
+            node = ref.resolve_forward()
+            assert node.forward is None
+            assert eid in node.local, f"entry {eid} not in Local of its node"

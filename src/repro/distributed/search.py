@@ -1,0 +1,82 @@
+"""Distributed directory-scoped vector search over the production mesh.
+
+The vector store is sharded row-wise across *all* mesh devices (a 512-chip pod
+pair holds ~billions of 1024-d bf16 rows). A DSQ executes as:
+
+  host: TrieHI resolves the directory scope -> per-shard packed bitmask
+  device (shard_map, all axes manual):
+      local masked top-k (the Pallas scoped_topk shape, here jnp for SPMD)
+   -> all_gather of (k, score, global-id) triples   [O(devices*k) bytes]
+   -> final top-k merge, replicated result
+
+This mirrors the paper's architecture (scope resolution feeds the ANN
+executor) at pod scale; the collective term is tiny by design, making the scan
+compute/memory-bound — see EXPERIMENTS.md §Roofline "viking-scan" rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_scoped_search(mesh: Mesh, n_total: int, dim: int, k: int,
+                       metric: str = "ip", dtype=None):
+    """Builds search(db, mask, queries) jitted for ``mesh``.
+
+    db    : (n_total, dim)  sharded over all mesh axes on dim 0
+    mask  : (n_total,) int8 scope mask, sharded identically
+    queries: (q, dim) replicated
+    Returns (scores (q,k), global ids (q,k)) replicated.
+    """
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n_total % n_dev == 0, (n_total, n_dev)
+    n_loc = n_total // n_dev
+
+    def local_search(db_l, mask_l, q):
+        # int8-quantized stores upcast in-register: HBM bytes halve vs bf16
+        if db_l.dtype == jnp.int8:
+            db_l = db_l.astype(jnp.bfloat16) * jnp.bfloat16(1.0 / 127)
+        scores = jnp.einsum("qd,nd->qn", q.astype(db_l.dtype), db_l,
+                            preferred_element_type=jnp.float32)
+        if metric == "l2":
+            scores = 2 * scores - jnp.sum(
+                db_l.astype(jnp.float32) ** 2, axis=-1)[None, :]
+        scores = jnp.where(mask_l[None, :] != 0, scores, -jnp.inf)
+        v, i = jax.lax.top_k(scores, k)                      # (q, k) local
+        shard = jax.lax.axis_index(axes)                     # flattened index
+        gi = i.astype(jnp.int32) + shard * n_loc
+        # gather candidates from every shard and merge
+        av = jax.lax.all_gather(v, axes, tiled=False)        # (n_dev, q, k)
+        ai = jax.lax.all_gather(gi, axes, tiled=False)
+        av = av.transpose(1, 0, 2).reshape(-1, n_dev * k)
+        ai = ai.transpose(1, 0, 2).reshape(-1, n_dev * k)
+        fv, fi = jax.lax.top_k(av, k)
+        fid = jnp.take_along_axis(ai, fi, axis=1)
+        return fv, fid
+
+    fn = jax.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def search_input_specs(mesh: Mesh, n_total: int, dim: int, n_queries: int,
+                       dtype=jnp.bfloat16):
+    """ShapeDtypeStructs + shardings for the dry-run of the scan step."""
+    axes = tuple(mesh.axis_names)
+    db = jax.ShapeDtypeStruct((n_total, dim), dtype)
+    mask = jax.ShapeDtypeStruct((n_total,), jnp.int8)
+    q = jax.ShapeDtypeStruct((n_queries, dim), jnp.bfloat16)
+    shardings = (NamedSharding(mesh, P(axes, None)),
+                 NamedSharding(mesh, P(axes)),
+                 NamedSharding(mesh, P(None, None)))
+    return (db, mask, q), shardings

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Layout per repo convention: ``<name>.py`` holds the raw pl.pallas_call +
+BlockSpec kernel, ``ops.py`` the jit'd public wrappers (padding/interpret
+switch), ``ref.py`` the pure-jnp oracles used by the sweep tests.
+"""
+from . import ops, ref
+from .ops import flash_decode, mask_and_popcount, scoped_topk
+
+__all__ = ["ops", "ref", "scoped_topk", "mask_and_popcount", "flash_decode"]

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: GQA flash-decode attention (one query token, long cache).
+
+``decode_32k`` / ``long_500k`` shapes are dominated by streaming the KV cache
+HBM->VMEM once per generated token — the canonical memory-roofline workload of
+serving. This kernel computes, per (batch, kv-head) grid cell, the online-
+softmax attention of the ``group`` query heads sharing one KV head against the
+cache in (block_s) tiles, with running (m, l, acc) statistics in VMEM scratch.
+
+Grid: (batch, kv_heads, s_blocks), s innermost. Length masking comes from an
+explicit per-position validity mask so ragged batches work.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                # (group, d)
+    kk = k_ref[0, 0]                               # (block_s, d)
+    vv = v_ref[0, 0]                               # (block_s, d)
+    valid = mask_ref[0] != 0                       # (block_s,)
+
+    s = jax.lax.dot_general(
+        q, kk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (group, block_s)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (group, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                # rescale old stats
+    p = jnp.exp(s - m_new)                         # (group, block_s)
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(vv.dtype), vv, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == pl.num_programs(2) - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 length_mask: jax.Array, block_s: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """GQA decode attention.
+
+    q: (b, h, d); k, v: (b, kv_h, s, d); length_mask: (b, s) int8/bool.
+    h % kv_h == 0; s % block_s == 0 (ops.py pads mask=0 which is ignored).
+    Returns (b, h, d) with the same dtype as q.
+    """
+    b, h, d = q.shape
+    _, kv_h, s, _ = k.shape
+    assert h % kv_h == 0 and s % block_s == 0, (h, kv_h, s, block_s)
+    group = h // kv_h
+    scale = 1.0 / float(np.sqrt(d))
+    qg = q.reshape(b, kv_h, group, d)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(b, kv_h, s // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, block_s, d), lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, block_s), lambda bi, hi, si: (bi, si)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv_h, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, length_mask.astype(jnp.int8))
+    return out.reshape(b, h, d)

@@ -1,0 +1,81 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, dtype plumbing and
+an interpret/compile switch (interpret=True on CPU containers; on real TPUs
+set ``REPRO_PALLAS_COMPILE=1`` or pass interpret=False).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bitmap_ops import mask_and_popcount as _mask_and_popcount
+from .flash_decode import flash_decode as _flash_decode
+from .scoped_topk import scoped_topk as _scoped_topk
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value), n
+
+
+def scoped_topk(queries, rows, mask, k: int = 10, metric: str = "ip",
+                block_q: int = 8, block_n: int = 1024,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Masked top-k over rows; pads q/n to block multiples, unpads results."""
+    interpret = _INTERPRET if interpret is None else interpret
+    queries = jnp.asarray(queries, dtype=jnp.float32)
+    rows = jnp.asarray(rows)
+    mask = jnp.asarray(mask)
+    block_n = min(block_n, max(128, rows.shape[0]))
+    block_q = min(block_q, max(1, queries.shape[0]))
+    qp, nq = _pad_to(queries, 0, block_q)
+    rp, _ = _pad_to(rows, 0, block_n)
+    mp, _ = _pad_to(mask.astype(jnp.int8), 0, block_n, value=0)
+    vals, ids = _scoped_topk(qp, rp, mp, k=k, block_q=block_q,
+                             block_n=block_n, metric=metric,
+                             interpret=interpret)
+    return vals[:nq], ids[:nq]
+
+
+def mask_and_popcount(a, b, block: int = 2048,
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    interpret = _INTERPRET if interpret is None else interpret
+    a = jnp.asarray(a, dtype=jnp.uint32)
+    b = jnp.asarray(b, dtype=jnp.uint32)
+    block = min(block, max(8, a.shape[0]))
+    ap, n = _pad_to(a, 0, block)
+    bp, _ = _pad_to(b, 0, block)
+    words, count = _mask_and_popcount(ap, bp, block=block, interpret=interpret)
+    return words[:n], count
+
+
+def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    interpret = _INTERPRET if interpret is None else interpret
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    b, _, s, _ = k.shape
+    if length_mask is None:
+        length_mask = jnp.ones((b, s), dtype=jnp.int8)
+    block_s = min(block_s, max(128, s))
+    kp, _ = _pad_to(k, 2, block_s)
+    vp, _ = _pad_to(v, 2, block_s)
+    mp, _ = _pad_to(jnp.asarray(length_mask, jnp.int8), 1, block_s, value=0)
+    return _flash_decode(q, kp, vp, mp, block_s=block_s, interpret=interpret)
+
+
+__all__ = ["scoped_topk", "mask_and_popcount", "flash_decode", "ref"]

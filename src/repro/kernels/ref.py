@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` uses only jax.numpy / lax high-level ops, no Pallas, and is the
+target of the per-kernel shape/dtype sweep tests (assert_allclose).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def scoped_topk_ref(queries: jax.Array, rows: jax.Array, mask: jax.Array,
+                    k: int = 10, metric: str = "ip"
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Unfused reference: materializes the full (q, n) score matrix."""
+    queries = queries.astype(jnp.float32)
+    rows_f = rows.astype(jnp.float32)
+    scores = queries @ rows_f.T
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.sum(rows_f * rows_f, axis=1)[None, :]
+    valid = mask.astype(bool)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    vals, ids = jax.lax.top_k(scores, k)
+    ids = jnp.where(vals <= NEG_INF, -1, ids)
+    return vals, ids.astype(jnp.int32)
+
+
+def mask_and_popcount_ref(a: jax.Array, b: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    words = a & b
+    count = jnp.sum(jax.lax.population_count(words).astype(jnp.int32))
+    return words, count
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length_mask: jax.Array) -> jax.Array:
+    """Plain GQA attention for one query token (no flash blocking)."""
+    b, h, d = q.shape
+    _, kv_h, s, _ = k.shape
+    group = h // kv_h
+    qg = q.reshape(b, kv_h, group, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / float(np.sqrt(d))
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, kf) * scale
+    valid = length_mask.astype(bool)[:, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

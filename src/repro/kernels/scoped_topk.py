@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused scope-masked distance + running top-k scan.
+
+The compute hot-spot of a directory-scoped vector search (DSQ after scope
+resolution) is "score my query batch against every candidate row and keep the
+k best". On CPU, Viking walks posting lists; on TPU the roofline-optimal shape
+is a *streamed block scan*:
+
+  HBM -> VMEM : X tile (block_n, d), scope-mask tile (block_n,)
+  MXU         : S = Q · Xᵀ                       (block_q, block_n)
+  VPU         : S = where(mask, S, -inf); merge into running top-k scratch
+
+The running (block_q, k) best values/ids live in VMEM scratch across the whole
+n-sweep, so the (q, n) score matrix is never materialized in HBM — that is the
+memory-roofline win over the unfused jnp reference (see EXPERIMENTS.md §Perf).
+
+Grid: (q_blocks, n_blocks), n innermost so the scratch accumulates over n and
+is flushed to the output block once per q block at the last n step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _merge_topk(vals, ids, new_vals, new_ids, k: int):
+    """Merge (q, m) new scores into (q, k) running best via k iterative maxes.
+
+    k passes of (max, mask-out) over the concatenated (q, k+m) candidates;
+    vectorized over q on the VPU. For k <= 32 this is far cheaper than a sort
+    and needs no cross-lane shuffles beyond a row argmax.
+    """
+    cat_v = jnp.concatenate([vals, new_vals], axis=1)         # (q, k+m)
+    cat_i = jnp.concatenate([ids, new_ids], axis=1)
+    out_v = jnp.full_like(vals, NEG_INF)
+    out_i = jnp.full_like(ids, -1)
+    for j in range(k):
+        best = jnp.argmax(cat_v, axis=1)                      # (q,)
+        row = jax.lax.broadcasted_iota(jnp.int32, cat_v.shape, 1)
+        hit = row == best[:, None]
+        out_v = out_v.at[:, j].set(jnp.max(cat_v, axis=1))
+        out_i = out_i.at[:, j].set(
+            jnp.sum(jnp.where(hit, cat_i, 0), axis=1))
+        cat_v = jnp.where(hit, NEG_INF, cat_v)
+    return out_v, out_i
+
+
+def _kernel(q_ref, x_ref, mask_ref, vals_ref, ids_ref,
+            acc_v, acc_i, *, k: int, block_n: int, metric: str):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...]                                            # (block_q, d)
+    x = x_ref[...]                                            # (block_n, d)
+    scores = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (block_q, block_n)
+    if metric == "l2":
+        sq = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32), axis=1)
+        scores = 2.0 * scores - sq[None, :]
+    mask = mask_ref[...] != 0                                 # (block_n,)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    base = ni * block_n
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    ids = jnp.where(mask[None, :], ids, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "metric", "interpret"))
+def scoped_topk(queries: jax.Array, rows: jax.Array, mask: jax.Array,
+                k: int = 10, block_q: int = 8, block_n: int = 1024,
+                metric: str = "ip", interpret: bool = True
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Fused masked top-k. queries (q, d) f32; rows (n, d); mask (n,) int8/bool.
+
+    Returns (values (q, k) f32 descending, ids (q, k) int32; -1 = no candidate).
+    q must be a multiple of block_q and n of block_n (ops.py pads).
+    """
+    nq, d = queries.shape
+    n = rows.shape[0]
+    assert nq % block_q == 0 and n % block_n == 0, (nq, n, block_q, block_n)
+    assert d % 128 == 0 or interpret, "lane-dim should be 128-aligned on TPU"
+    grid = (nq // block_q, n // block_n)
+    kernel = functools.partial(_kernel, k=k, block_n=block_n, metric=metric)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), rows, mask.astype(jnp.int8))
+    return vals, ids

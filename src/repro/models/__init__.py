@@ -1,0 +1,7 @@
+from .common import ArchConfig, constrain, logical_spec, named_sharding
+from .transformer import (cache_schema, decode_step, forward, loss_fn,
+                          model_schema, prefill)
+
+__all__ = ["ArchConfig", "constrain", "logical_spec", "named_sharding",
+           "model_schema", "forward", "loss_fn", "prefill", "decode_step",
+           "cache_schema"]

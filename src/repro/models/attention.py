@@ -1,0 +1,396 @@
+"""GQA attention: blocked-flash training/prefill path + cache decode path.
+
+The training path is flash attention expressed in pure lax (``lax.map`` over
+query blocks, ``lax.scan`` over KV blocks, online-softmax) with a **custom
+block-recompute VJP**: neither forward nor backward materializes the (Sq, Skv)
+score matrix, and remat policies cannot accidentally save per-block scores
+(the 766 GB/device failure mode of autodiff-through-blocked-attention — see
+EXPERIMENTS.md §Dry-run). It compiles on every backend (the dry-run compiles
+on CPU) and SPMD-partitions cleanly; kernels/flash_decode.py is the Pallas
+drop-in for the decode hot loop on real TPUs.
+
+``naive_attention`` is the unblocked equivalent used by the roofline L1/L2
+cost compiles (XLA cost analysis counts loop bodies once; the naive path has
+no loops so every FLOP is visible).
+
+Local-attention variants (sliding window / chunked "iRoPE") are *traced
+per-layer scalars* so one scan body serves hybrid stacks: window == 0 means
+global; window > 0 masks ``qi - kj >= window``; chunk > 0 masks cross-chunk.
+
+Blocked layouts (leading axis = lax.map axis):
+    q blocks : (nq, B, KV, G, bq, hd)
+    k/v blocks: (nk, B, bk, KV, hd)
+    stats m,l: (nq, B, KV, G, bq)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Spec, apply_rope, rms_norm
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def attn_schema(cfg) -> Dict[str, Spec]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    s: Dict[str, Spec] = {
+        "wq": Spec((D, H, hd), ("embed_fsdp", "heads", "head_dim")),
+        "wk": Spec((D, KV, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wv": Spec((D, KV, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wo": Spec((H, hd, D), ("heads", "head_dim", "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((H, hd), ("heads", "head_dim"), "zeros")
+        s["bk"] = Spec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = Spec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((hd,), (None,), "ones")
+        s["k_norm"] = Spec((hd,), (None,), "ones")
+    return s
+
+
+def qkv_project(p, x, cfg, positions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B, S, D) -> q (B, S, H, hd), k/v (B, S, KV, hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _local_mask(qi: jax.Array, kj: jax.Array, causal: bool,
+                window: jax.Array, chunk: jax.Array) -> jax.Array:
+    """(q, k) validity from absolute indices + traced window/chunk scalars."""
+    qi_ = qi[:, None]
+    kj_ = kj[None, :]
+    m = jnp.ones((qi.shape[0], kj.shape[0]), dtype=bool)
+    if causal:
+        m &= kj_ <= qi_
+    m &= jnp.where(window > 0, (qi_ - kj_) < window, True)
+    m &= jnp.where(chunk > 0, qi_ // jnp.maximum(chunk, 1)
+                   == kj_ // jnp.maximum(chunk, 1), True)
+    return m
+
+
+# ------------------------------------------------------------- naive variant
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: jax.Array | int = 0,
+                    chunk: jax.Array | int = 0,
+                    q_offset: int = 0) -> jax.Array:
+    """Unblocked attention (materializes (Sq, Skv) scores); the loop-free cost
+    oracle for roofline compiles, and the small-shape fast path."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KVh, _ = k.shape
+    G = H // KVh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, KVh, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = _local_mask(q_offset + jnp.arange(Sq), jnp.arange(Skv), causal,
+                        jnp.asarray(window, jnp.int32),
+                        jnp.asarray(chunk, jnp.int32))
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[None, None, None], p, 0.0)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------- flash custom-VJP
+
+
+def _fwd_blocks(q, k, v, window, chunk, *, causal, q_offset, block_q, block_k,
+                skv_valid):
+    """Blocked forward. Returns (out, m, l), out (nq,B,KV,G,bq,hd) f32."""
+    nq, B, KVh, G, bq, hd = q.shape
+    nk = k.shape[0]
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_block(args):
+        qi_idx, qblk = args                       # qblk (B, KV, G, bq, hd)
+        q_pos = q_offset + qi_idx * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, kv):
+            m_prev, l_prev, acc = carry
+            kj_idx, kblk, vblk = kv               # kblk (B, bk, KV, hd)
+            k_pos = kj_idx * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qblk,
+                           kblk.transpose(0, 2, 1, 3),
+                           preferred_element_type=jnp.float32) * scale
+            valid = _local_mask(q_pos, k_pos, causal, window, chunk)
+            valid &= (k_pos < skv_valid)[None, :]
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(valid[None, None, None], p, 0.0)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bksd->bkgqd",
+                            p.astype(vblk.dtype),
+                            vblk.transpose(0, 2, 1, 3),
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, KVh, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, KVh, G, bq), jnp.float32),
+                jnp.zeros((B, KVh, G, bq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), k, v))
+        return acc / jnp.maximum(l, 1e-30)[..., None], m, l
+
+    return jax.lax.map(q_block, (jnp.arange(nq), q))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash_core(q, k, v, window, chunk, causal, q_offset, block_q, block_k,
+                skv_valid):
+    out, _, _ = _fwd_blocks(q, k, v, window, chunk, causal=causal,
+                            q_offset=q_offset, block_q=block_q,
+                            block_k=block_k, skv_valid=skv_valid)
+    return out
+
+
+def _flash_fwd(q, k, v, window, chunk, causal, q_offset, block_q, block_k,
+               skv_valid):
+    out, m, l = _fwd_blocks(q, k, v, window, chunk, causal=causal,
+                            q_offset=q_offset, block_q=block_q,
+                            block_k=block_k, skv_valid=skv_valid)
+    return out, (q, k, v, out, m, l, window, chunk)
+
+
+def _flash_bwd(causal, q_offset, block_q, block_k, skv_valid, res, dout):
+    """Two-pass blocked backward (flash backward with block recompute):
+    pass A over q blocks -> dq; pass B over kv blocks -> dk, dv.
+    Residuals are O(S) stats; never (Sq, Skv)."""
+    q, k, v, out, m, l, window, chunk = res
+    nq, B, KVh, G, bq, hd = q.shape
+    nk, bk = k.shape[0], k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    dout = dout.astype(jnp.float32)
+    l_safe = jnp.maximum(l, 1e-30)
+    Drow = jnp.sum(dout * out, axis=-1)                # (nq,B,KV,G,bq)
+
+    def recompute_p(qblk, kblk, q_pos, k_pos, m_b, l_b):
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qblk,
+                       kblk.transpose(0, 2, 1, 3),
+                       preferred_element_type=jnp.float32) * scale
+        valid = _local_mask(q_pos, k_pos, causal, window, chunk)
+        valid &= (k_pos < skv_valid)[None, :]
+        p = jnp.exp(jnp.where(valid[None, None, None], s, NEG_INF)
+                    - m_b[..., None]) / l_b[..., None]
+        return jnp.where(valid[None, None, None], p, 0.0)
+
+    def q_pass(args):
+        qi_idx, qblk, do_b, m_b, l_b, D_b = args
+        q_pos = q_offset + qi_idx * block_q + jnp.arange(block_q)
+
+        def kv_step(dq_acc, kv):
+            kj_idx, kblk, vblk = kv
+            k_pos = kj_idx * block_k + jnp.arange(block_k)
+            p = recompute_p(qblk, kblk, q_pos, k_pos, m_b, l_b)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", do_b,
+                            vblk.transpose(0, 2, 1, 3).astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_b[..., None]) * scale
+            return dq_acc + jnp.einsum(
+                "bkgqs,bksd->bkgqd", ds,
+                kblk.transpose(0, 2, 1, 3).astype(jnp.float32),
+                preferred_element_type=jnp.float32), None
+
+        dq0 = jnp.zeros((B, KVh, G, bq, hd), jnp.float32)
+        dq, _ = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), k, v))
+        return dq
+
+    dq = jax.lax.map(q_pass, (jnp.arange(nq), q, dout, m, l_safe, Drow))
+
+    def kv_pass(args):
+        kj_idx, kblk, vblk = args
+        k_pos = kj_idx * block_k + jnp.arange(block_k)
+
+        def q_step(carry, xs):
+            dk_acc, dv_acc = carry
+            qi_idx, qblk, do_b, m_b, l_b, D_b = xs
+            q_pos = q_offset + qi_idx * block_q + jnp.arange(block_q)
+            p = recompute_p(qblk, kblk, q_pos, k_pos, m_b, l_b)
+            dv_acc = dv_acc + jnp.einsum("bkgqs,bkgqd->bksd", p, do_b,
+                                         preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", do_b,
+                            vblk.transpose(0, 2, 1, 3).astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_b[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bkgqs,bkgqd->bksd", ds, qblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        zero = jnp.zeros((B, KVh, bk, hd), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(q_step, (zero, zero),
+                                   (jnp.arange(nq), q, dout, m, l_safe, Drow))
+        # (B, KV, bk, hd) -> per-block layout (B, bk, KV, hd)
+        return dk.transpose(0, 2, 1, 3), dv.transpose(0, 2, 1, 3)
+
+    dk, dv = jax.lax.map(kv_pass, (jnp.arange(nk), k, v))
+    wz = np.zeros(jnp.shape(window), jax.dtypes.float0)
+    cz = np.zeros(jnp.shape(chunk), jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            wz, cz)
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: jax.Array | int = 0,
+                    chunk: jax.Array | int = 0,
+                    q_offset: int = 0,
+                    block_q: int = 1024, block_k: int = 1024) -> jax.Array:
+    """q (B,Sq,H,hd); k,v (B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KVh, _ = k.shape
+    G = H // KVh
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq, nk = -(-Sq // block_q), -(-Skv // block_k)
+    pad_q, pad_k = nq * block_q - Sq, nk * block_k - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qb = (q.reshape(B, nq, block_q, KVh, G, hd)
+          .transpose(1, 0, 3, 4, 2, 5))                # (nq,B,KV,G,bq,hd)
+    kb = k.reshape(B, nk, block_k, KVh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_k, KVh, hd).transpose(1, 0, 2, 3, 4)
+    out = _flash_core(qb, kb, vb,
+                      jnp.asarray(window, jnp.int32),
+                      jnp.asarray(chunk, jnp.int32),
+                      causal, q_offset, block_q, block_k, Skv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * block_q, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "flash", **kw):
+    if impl == "naive":
+        kw.pop("block_q", None)
+        kw.pop("block_k", None)
+        return naive_attention(q, k, v, **kw)
+    return flash_attention(q, k, v, **kw)
+
+
+# ------------------------------------------------ static-local band variants
+
+
+def _pad_seq(x, mult):
+    pad = (-x.shape[1]) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+def local_attention(q, k, v, *, window: int, impl: str = "flash",
+                    **kw) -> jax.Array:
+    """Sliding-window attention with a *static* window: query band i attends
+    kv band [i-1, i] (2w keys) — O(S·2w) FLOPs/bytes instead of O(S²).
+    The beyond-paper optimization for SWA-heavy stacks (hymba): the generic
+    flash path computes every (masked) block because the window is a traced
+    per-layer scalar; with a static window the work simply isn't issued.
+    Bands fold into the batch dim; band 0 runs as plain causal attention."""
+    B, S, H, hd = q.shape
+    w = int(window)
+    if S <= w:
+        return attention(q, k, v, impl=impl, causal=True, window=0, chunk=0,
+                         **kw)
+    q2, k2, v2 = _pad_seq(q, w), _pad_seq(k, w), _pad_seq(v, w)
+    S2 = q2.shape[1]
+    nb = S2 // w
+    KVh = k.shape[2]
+    qb = q2.reshape(B, nb, w, H, hd)
+    kb = k2.reshape(B, nb, w, KVh, hd)
+    vb = v2.reshape(B, nb, w, KVh, hd)
+    out0 = attention(qb[:, 0], kb[:, 0], vb[:, 0], impl=impl, causal=True,
+                     window=0, chunk=0, **kw)
+    q1 = qb[:, 1:].reshape(B * (nb - 1), w, H, hd)
+    kcat = jnp.concatenate([kb[:, :-1], kb[:, 1:]], axis=2).reshape(
+        B * (nb - 1), 2 * w, KVh, hd)
+    vcat = jnp.concatenate([vb[:, :-1], vb[:, 1:]], axis=2).reshape(
+        B * (nb - 1), 2 * w, KVh, hd)
+    out1 = attention(q1, kcat, vcat, impl=impl, causal=True, window=w,
+                     q_offset=w, **kw)
+    out = jnp.concatenate([out0[:, None], out1.reshape(B, nb - 1, w, H, hd)],
+                          axis=1).reshape(B, S2, H, hd)
+    return out[:, :S]
+
+
+def chunked_attention(q, k, v, *, chunk: int, impl: str = "flash",
+                      **kw) -> jax.Array:
+    """Chunked local attention (llama4 iRoPE local layers) with a static chunk
+    size: block-diagonal causal attention, O(S·c) instead of O(S²)."""
+    B, S, H, hd = q.shape
+    c = int(chunk)
+    if S <= c:
+        return attention(q, k, v, impl=impl, causal=True, window=0, chunk=0,
+                         **kw)
+    q2, k2, v2 = _pad_seq(q, c), _pad_seq(k, c), _pad_seq(v, c)
+    nc = q2.shape[1] // c
+    KVh = k.shape[2]
+    out = attention(q2.reshape(B * nc, c, H, hd),
+                    k2.reshape(B * nc, c, KVh, hd),
+                    v2.reshape(B * nc, c, KVh, hd),
+                    impl=impl, causal=True, window=0, chunk=0, **kw)
+    return out.reshape(B, nc * c, H, hd)[:, :S]
+
+
+# --------------------------------------------------------------- decode path
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     window: jax.Array | int = 0,
+                     chunk: jax.Array | int = 0) -> jax.Array:
+    """One-token attention against a static cache.
+
+    q (B, H, hd); caches (B, KV, S, hd); cache_len (B,) = #valid positions
+    (the new token sits at index cache_len - 1). Plain einsum shape so XLA
+    SPMD can shard the cache seq dim for the long-context cells.
+    """
+    B, H, hd = q.shape
+    _, KVh, S, _ = k_cache.shape
+    G = H // KVh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KVh, G, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)[None, :]
+    qpos = (cache_len - 1)[:, None]
+    valid = pos < cache_len[:, None]
+    window = jnp.asarray(window, jnp.int32)
+    chunk = jnp.asarray(chunk, jnp.int32)
+    valid &= jnp.where(window > 0, (qpos - pos) < window, True)
+    valid &= jnp.where(chunk > 0,
+                       qpos // jnp.maximum(chunk, 1) == pos // jnp.maximum(chunk, 1),
+                       True)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,143 @@
+"""Shared NN building blocks + the parameter-schema mini-framework.
+
+A model is described by a *schema*: a nested dict whose leaves are
+:class:`Spec` (shape, logical axis names, init kind). From one schema we derive
+(1) initialized parameters, (2) the logical-axis tree for sharding rules, and
+(3) allocation-free ShapeDtypeStructs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Spec(NamedTuple):
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(schema, key: jax.Array, dtype) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: Spec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[0] if spec.shape else 1
+        std = spec.scale * (0.02 if spec.init == "embed"
+                            else 1.0 / math.sqrt(max(fan_in, 1)))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def logical_tree(schema):
+    return jax.tree.map(lambda s: s.logical, schema, is_leaf=is_spec)
+
+
+def shape_tree(schema, dtype):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        schema, is_leaf=is_spec)
+
+
+def stack_schema(schema, n: int):
+    """Prepend a layer axis to every leaf (scan-over-layers parameter stack)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.logical, s.init, s.scale),
+        schema, is_leaf=is_spec)
+
+
+# ------------------------------------------------------------------- numerics
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_up, w_down) -> jax.Array:
+    return jax.nn.gelu(x @ w_up) @ w_down
+
+
+def relu2_mlp(x: jax.Array, w_up, w_down) -> jax.Array:
+    h = jnp.maximum(x @ w_up, 0)
+    return (h * h) @ w_down
+
+
+def mlp_schema(d: int, f: int, act: str) -> Dict[str, Spec]:
+    if act == "swiglu":
+        return {
+            "w_gate": Spec((d, f), ("embed_fsdp", "mlp")),
+            "w_up": Spec((d, f), ("embed_fsdp", "mlp")),
+            "w_down": Spec((f, d), ("mlp", "embed_fsdp")),
+        }
+    return {
+        "w_up": Spec((d, f), ("embed_fsdp", "mlp")),
+        "w_down": Spec((f, d), ("mlp", "embed_fsdp")),
+    }
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    if act == "relu2":
+        return relu2_mlp(x, p["w_up"], p["w_down"])
+    return gelu_mlp(x, p["w_up"], p["w_down"])
+
+
+# ----------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return np.asarray(theta, np.float32) ** (
+        -np.arange(0, hd // 2, dtype=np.float32) / (hd // 2))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean CE over valid positions; logits (..., V) any float dtype.
+
+    Sharding note: the gold logit is extracted with an iota-mask reduction,
+    never ``take_along_axis`` — a gather along a vocab-sharded axis forces the
+    SPMD partitioner to all-gather the full (B, S, V) logits (tens of GB per
+    device at 150k vocab). Every op here is elementwise or a reduction over V,
+    which partitions cleanly.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], shifted, 0.0), axis=-1)
+    nll = lse - gold
+    valid = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,182 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked-scan training path and
+single-token recurrent decode path.
+
+Faithful to arXiv:2405.21060's SSD algorithm: within a chunk the output is the
+masked (semiseparable) attention-like form, across chunks a state recurrence
+carries (H, hd, N) per-head states — giving O(L·Q) work with constant-memory
+decode, which is what makes the ``long_500k`` cell runnable for SSM/hybrid
+architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Spec, rms_norm
+
+
+def ssm_dims(cfg) -> Dict[str, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return dict(d_in=d_in, n_heads=n_heads, conv_dim=conv_dim,
+                proj_out=2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + n_heads)
+
+
+def ssm_schema(cfg) -> Dict[str, Spec]:
+    dims = ssm_dims(cfg)
+    D = cfg.d_model
+    return {
+        "in_proj": Spec((D, dims["proj_out"]), ("embed_fsdp", "mlp")),
+        "conv_w": Spec((dims["conv_dim"], cfg.ssm_conv), ("mlp", None), "small",
+                       0.5),
+        "conv_b": Spec((dims["conv_dim"],), ("mlp",), "zeros"),
+        "A_log": Spec((dims["n_heads"],), (None,), "ones"),
+        "D_skip": Spec((dims["n_heads"],), (None,), "ones"),
+        "dt_bias": Spec((dims["n_heads"],), (None,), "zeros"),
+        "norm": Spec((dims["d_in"],), (None,), "ones"),
+        "out_proj": Spec((dims["d_in"], D), ("mlp", "embed_fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x (B, L, C); w (C, K). Returns (y, new_state)
+    where state carries the last K-1 inputs (B, C, K-1) for decode."""
+    B, L, C = x.shape
+    K = w.shape[1]
+    xt = x.transpose(0, 2, 1)                              # (B, C, L)
+    if state is None:
+        pad = jnp.zeros((B, C, K - 1), x.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xt], axis=-1)             # (B, C, L+K-1)
+    y = jnp.zeros((B, C, L), jnp.float32)
+    for k in range(K):
+        y = y + full[:, :, k: k + L].astype(jnp.float32) * w[:, k][None, :, None]
+    y = y + b[None, :, None]
+    new_state = full[:, :, L:]                             # last K-1 inputs
+    return jax.nn.silu(y).astype(x.dtype).transpose(0, 2, 1), new_state
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    dims = ssm_dims(cfg)
+    d_in, gn = dims["d_in"], cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in: d_in + d_in + 2 * gn]
+    dt = zxbcdt[..., d_in + d_in + 2 * gn:]
+    return z, xBC, dt
+
+
+def _ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array,
+                 Bm: jax.Array, Cm: jax.Array, chunk: int,
+                 h0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """SSD chunked scan.
+
+    xh (B,L,H,hd)  inputs per head;   dt (B,L,H) positive step sizes;
+    A (H,) negative decay rates;      Bm, Cm (B,L,H,N) per-head (group-expanded).
+    Returns (y (B,L,H,hd), final state (B,H,hd,N)).
+    """
+    Bsz, L, H, hd = xh.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L, (L, chunk)
+    f32 = jnp.float32
+    xb = (xh.astype(f32) * dt[..., None]).reshape(Bsz, nc, chunk, H, hd)
+    la = (dt * A[None, None, :]).reshape(Bsz, nc, chunk, H)   # log decay <= 0
+    Bc = Bm.astype(f32).reshape(Bsz, nc, chunk, H, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, H, N)
+    cs = jnp.cumsum(la, axis=2)                                # (B,nc,Q,H)
+    seg_total = cs[:, :, -1, :]                                # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within chunk): y_ij = C_i.B_j * exp(cs_i-cs_j)
+    decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]        # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of masked (positive) entries overflows and poisons
+    # the backward pass with 0*inf NaNs.
+    Lmat = jnp.exp(jnp.where(tri, decay, -jnp.inf))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * Lmat
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xb)
+
+    # ---- chunk states: S_c = sum_j exp(seg_total - cs_j) B_j (x_j)^T
+    w_state = jnp.exp(seg_total[:, :, None, :] - cs)           # (B,nc,Q,H)
+    S = jnp.einsum("bcjhn,bcjhp,bcjh->bchpn", Bc, xb, w_state)  # (B,nc,H,hd,N)
+
+    # ---- inter-chunk recurrence over nc
+    gamma = jnp.exp(seg_total)                                 # (B,nc,H)
+
+    def step(h, inp):
+        g, s = inp                                             # (B,H), (B,H,hd,N)
+        h_new = h * g[..., None, None] + s
+        return h_new, h                                        # emit state *before* chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, hd, N), f32)
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (gamma.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,hd,N)
+
+    # ---- inter-chunk contribution: y_i += exp(cs_i) * C_i . h_prev
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Cc, h_prevs, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(Bsz, L, H, hd)
+    return y, h_final
+
+
+def ssm_apply(p: Dict[str, jax.Array], x: jax.Array, cfg,
+              conv_state: Optional[jax.Array] = None,
+              ssm_state: Optional[jax.Array] = None,
+              return_state: bool = False):
+    """Full Mamba-2 mixer on (B, L, D). When states are given, they seed the
+    recurrence (decode/prefill continuation)."""
+    dims = ssm_dims(cfg)
+    H, hd, N, G = dims["n_heads"], cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    B, L, _ = x.shape
+    z, xBC, dt = _split_proj(cfg, x @ p["in_proj"])
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    d_in = dims["d_in"]
+    xs = xBC[..., :d_in].reshape(B, L, H, hd)
+    Bm = xBC[..., d_in: d_in + G * N].reshape(B, L, G, N)
+    Cm = xBC[..., d_in + G * N:].reshape(B, L, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    chunk = min(cfg.ssm_chunk, L)
+    if L % chunk != 0:  # pad to chunk multiple (smoke-test shapes)
+        pad = chunk - L % chunk
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, h_final = _ssd_chunked(xs, dt, A, Bm, Cm, chunk, ssm_state)
+    y = y[:, :L]
+    y = y + p["D_skip"][None, None, :, None] * xs[:, :L].astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (new_conv, h_final)
+    return out
+
+
+def ssm_decode_step(p: Dict[str, jax.Array], x: jax.Array, cfg,
+                    conv_state: jax.Array, ssm_state: jax.Array):
+    """Single-token recurrent update. x (B, 1, D); states as in ssm_apply."""
+    out, (new_conv, new_h) = ssm_apply(
+        p, x, cfg, conv_state=conv_state, ssm_state=ssm_state,
+        return_state=True)
+    return out, new_conv, new_h
+
+
+def ssm_state_shapes(cfg, batch: int) -> Dict[str, Tuple[int, ...]]:
+    dims = ssm_dims(cfg)
+    return {
+        "conv": (batch, dims["conv_dim"], cfg.ssm_conv - 1),
+        "h": (batch, dims["n_heads"], cfg.ssm_head_dim, cfg.ssm_state),
+    }

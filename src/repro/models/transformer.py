@@ -1,0 +1,461 @@
+"""The LM zoo engine: one functional transformer covering all 10 assigned
+architectures (dense GQA / MoE / SSM / hybrid / enc-dec / stub-frontend VLM &
+audio), with three entry points per model:
+
+* ``loss_fn``     — training forward + CE loss (train_4k cells)
+* ``prefill``     — full-sequence forward that also materializes the KV/SSM
+                    caches + last-position logits (prefill_32k cells)
+* ``decode_step`` — one-token step against static caches (decode_32k /
+                    long_500k cells)
+
+Layers run under ``lax.scan`` with stacked parameters (HLO size independent of
+depth — required for the 80-compile dry-run matrix on this box) and optional
+``jax.checkpoint`` remat. Per-layer attention locality (sliding-window /
+chunked) is a scanned int32 so hybrid stacks keep a single scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from . import attention as A
+from . import moe as MOE
+from . import ssm as SSM
+from .common import ArchConfig, activation_rules, constrain
+from .layers import (Spec, cross_entropy, mlp_apply, mlp_schema, rms_norm,
+                     stack_schema)
+
+# ------------------------------------------------------------------- schemas
+
+
+def layer_schema(cfg: ArchConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    s: Dict[str, Any] = {"ln1": Spec((D,), (None,), "ones")}
+    if not cfg.attn_free:
+        s["attn"] = A.attn_schema(cfg)
+    if cfg.attn_free or cfg.hybrid:
+        s["ssm"] = SSM.ssm_schema(cfg)
+    if cfg.n_experts > 0:
+        s["moe"] = MOE.moe_schema(cfg)
+        s["ln2"] = Spec((D,), (None,), "ones")
+    elif cfg.d_ff > 0:
+        s["mlp"] = mlp_schema(D, cfg.d_ff, cfg.act)
+        s["ln2"] = Spec((D,), (None,), "ones")
+    if cfg.is_encdec:  # decoder cross-attention
+        s["xattn"] = A.attn_schema(cfg)
+        s["lnx"] = Spec((D,), (None,), "ones")
+    return s
+
+
+def encoder_layer_schema(cfg: ArchConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    return {
+        "ln1": Spec((D,), (None,), "ones"),
+        "attn": A.attn_schema(cfg),
+        "ln2": Spec((D,), (None,), "ones"),
+        "mlp": mlp_schema(D, cfg.d_ff, cfg.act),
+    }
+
+
+def model_schema(cfg: ArchConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab_size
+    s: Dict[str, Any] = {
+        "embed": Spec((V, D), ("vocab", "embed"), "embed"),
+        "layers": stack_schema(layer_schema(cfg), cfg.n_layers),
+        "final_norm": Spec((D,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Spec((D, V), ("embed_fsdp", "vocab"))
+    if cfg.meta_tokens > 0:
+        s["meta"] = Spec((cfg.meta_tokens, D), (None, "embed"), "embed")
+    if cfg.is_encdec:
+        s["encoder"] = {
+            "layers": stack_schema(encoder_layer_schema(cfg),
+                                   cfg.encoder_layers),
+            "final_norm": Spec((D,), (None,), "ones"),
+        }
+    return s
+
+
+# ------------------------------------------------------------- layer bodies
+
+
+def _mixer(cfg, p, h_norm, *, positions, window, mesh,
+           return_cache: bool):
+    """Sequence mixer (attention / SSM / hybrid-parallel)."""
+    kv = ssm_state = None
+    outs = []
+    if not cfg.attn_free:
+        q, k, v = A.qkv_project(p["attn"], h_norm, cfg, positions)
+        if isinstance(window, (int, np.integer)):
+            # static per-layer locality (grouped-scan path): issue only the
+            # in-window work instead of masking a full S^2 sweep
+            w = int(window)
+            if w > 0 and cfg.attn_chunk:
+                attn = A.chunked_attention(q, k, v, chunk=w,
+                                           impl=cfg.attn_impl)
+            elif w > 0:
+                attn = A.local_attention(q, k, v, window=w,
+                                         impl=cfg.attn_impl)
+            else:
+                attn = A.attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                                   window=0, chunk=0)
+        else:
+            # traced per-layer scalar (single scan body): window carries the
+            # locality; sliding-window archs mask by window, chunked archs by
+            # chunk — global layers (window==0) stay unmasked.
+            attn = A.attention(
+                q, k, v, impl=cfg.attn_impl, causal=True,
+                window=window if cfg.sliding_window else 0,
+                chunk=window if cfg.attn_chunk else 0)
+        outs.append(jnp.einsum("bshk,hkd->bsd", attn, p["attn"]["wo"]))
+        if return_cache:
+            kv = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    if cfg.attn_free or cfg.hybrid:
+        if return_cache:
+            y, ssm_state = SSM.ssm_apply(p["ssm"], h_norm, cfg,
+                                         return_state=True)
+        else:
+            y = SSM.ssm_apply(p["ssm"], h_norm, cfg)
+        outs.append(y)
+    out = outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1])
+    return out, kv, ssm_state
+
+
+def _ffn(cfg, p, h, mesh):
+    if cfg.n_experts > 0:
+        return h + MOE.moe_apply(p["moe"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                                 cfg, mesh)
+    if cfg.d_ff > 0:
+        return h + mlp_apply(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                             cfg.act)
+    return h
+
+
+def decoder_layer(cfg: ArchConfig, p, x, *, positions, window,
+                  mesh: Optional[Mesh], enc_out=None,
+                  return_cache: bool = False):
+    """Full-sequence decoder layer (train / prefill)."""
+    mix, kv, ssm_state = _mixer(cfg, p, rms_norm(x, p["ln1"], cfg.norm_eps),
+                                positions=positions, window=window, mesh=mesh,
+                                return_cache=return_cache)
+    h = x + mix
+    xkv = None
+    if cfg.is_encdec and enc_out is not None:
+        hq = rms_norm(h, p["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hq, p["xattn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+        xa = A.attention(q, k, v, impl=cfg.attn_impl, causal=False,
+                         window=0, chunk=0)
+        h = h + jnp.einsum("bshk,hkd->bsd", xa, p["xattn"]["wo"])
+        if return_cache:
+            xkv = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    h = _ffn(cfg, p, h, mesh)
+    h = constrain(h, ("batch", "seq", "embed"), mesh, activation_rules(cfg))
+    if return_cache:
+        return h, (kv, ssm_state, xkv)
+    return h
+
+
+def decoder_layer_decode(cfg: ArchConfig, p, x, *, cache_slice, new_len,
+                         window, mesh: Optional[Mesh]):
+    """One-token decoder layer. x (B, 1, D); cache_slice holds this layer's
+    k/v (B,KV,S,hd), conv (B,C,K-1), h (B,H,hd,N), xk/xv; new_len (B,) is the
+    valid length *including* the new token."""
+    B = x.shape[0]
+    h_norm = rms_norm(x, p["ln1"], cfg.norm_eps)
+    outs = []
+    upd: Dict[str, jax.Array] = {}
+    pos = (new_len - 1)[:, None]                              # (B,1)
+    if not cfg.attn_free:
+        q, k, v = A.qkv_project(p["attn"], h_norm, cfg, pos)
+        k_cache = cache_slice["k"].at[jnp.arange(B), :, new_len - 1, :].set(
+            k[:, 0])
+        v_cache = cache_slice["v"].at[jnp.arange(B), :, new_len - 1, :].set(
+            v[:, 0])
+        attn = A.decode_attention(q[:, 0], k_cache, v_cache, new_len,
+                                  window=window,
+                                  chunk=cfg.attn_chunk if cfg.attn_chunk else 0)
+        outs.append(jnp.einsum("bhk,hkd->bd", attn, p["attn"]["wo"])[:, None])
+        upd["k"], upd["v"] = k_cache, v_cache
+    if cfg.attn_free or cfg.hybrid:
+        y, conv, hstate = SSM.ssm_decode_step(
+            p["ssm"], h_norm, cfg, cache_slice["conv"], cache_slice["h"])
+        outs.append(y)
+        upd["conv"], upd["h"] = conv, hstate
+    mix = outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1])
+    h = x + mix
+    if cfg.is_encdec:
+        hq = rms_norm(h, p["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hq, p["xattn"]["wq"])
+        enc_len = jnp.full((B,), cache_slice["xk"].shape[2], jnp.int32)
+        xa = A.decode_attention(q[:, 0], cache_slice["xk"], cache_slice["xv"],
+                                enc_len, window=0, chunk=0)
+        h = h + jnp.einsum("bhk,hkd->bd", xa, p["xattn"]["wo"])[:, None]
+        upd["xk"], upd["xv"] = cache_slice["xk"], cache_slice["xv"]
+    h = _ffn(cfg, p, h, mesh)
+    return h, upd
+
+
+# ------------------------------------------------------------------ forwards
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def _embed(cfg, params, tokens, extra, mesh):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", "seq", "embed"), mesh, activation_rules(cfg))
+    if cfg.num_patches > 0 and extra.get("patch_embeds") is not None:
+        pe = extra["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.num_patches:]], axis=1)
+    if cfg.meta_tokens > 0:
+        meta = jnp.broadcast_to(params["meta"][None],
+                                (x.shape[0],) + params["meta"].shape)
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    return constrain(x, ("batch", "seq", "embed"), mesh,
+                     activation_rules(cfg))
+
+
+def _encode(cfg, params, frames, mesh):
+    """Whisper-style encoder over stub frame embeddings (B, Senc, D)."""
+    x = frames.astype(cfg.param_dtype())
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def body(h, lp):
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = A.qkv_project(lp["attn"], hn, cfg, positions)
+        attn = A.attention(q, k, v, impl=cfg.attn_impl, causal=False,
+                           window=0, chunk=0)
+        h = h + jnp.einsum("bshk,hkd->bsd", attn, lp["attn"]["wo"])
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps),
+                          cfg.act)
+        return constrain(h, ("batch", "seq", "embed"), mesh,
+                         activation_rules(cfg)), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"]["layers"])
+    else:
+        rbody = _remat(cfg, body)
+        for i in range(cfg.encoder_layers):
+            x, _ = rbody(x, jax.tree.map(lambda a: a[i],
+                                         params["encoder"]["layers"]))
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens: jax.Array, cfg: ArchConfig,
+            mesh: Optional[Mesh] = None,
+            extra: Optional[Dict[str, jax.Array]] = None,
+            collect_cache: bool = False):
+    """Full-sequence forward. Returns hidden states (B, S, D) and (optionally)
+    the stacked per-layer cache pieces."""
+    extra = extra or {}
+    x = _embed(cfg, params, tokens, extra, mesh)
+    S_tot = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_tot)[None], x.shape[:2])
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(cfg, params, extra["frames"], mesh)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    if collect_cache:
+        def body(h, xs):
+            lp, w = xs
+            h, cache_bits = decoder_layer(cfg, lp, h, positions=positions,
+                                          window=w, mesh=mesh, enc_out=enc_out,
+                                          return_cache=True)
+            return h, cache_bits
+    else:
+        def body(h, xs):
+            lp, w = xs
+            h = decoder_layer(cfg, lp, h, positions=positions, window=w,
+                              mesh=mesh, enc_out=enc_out, return_cache=False)
+            return h, None
+    if cfg.scan_layers and cfg.layer_group > 1:
+        # super-layer scan: groups of ``layer_group`` layers per body, with
+        # STATIC window/chunk per in-group position (periodic interleave)
+        pgrp = cfg.layer_group
+        assert cfg.n_layers % pgrp == 0, (cfg.n_layers, pgrp)
+        wl = [int(w) for w in cfg.layer_windows()[:pgrp]]
+        grouped = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers // pgrp, pgrp) + a.shape[1:]),
+            params["layers"])
+
+        def gbody(h, gl):
+            cbits = []
+            for j in range(pgrp):
+                lp = jax.tree.map(lambda a: a[j], gl)
+                out = decoder_layer(cfg, lp, h, positions=positions,
+                                    window=wl[j], mesh=mesh, enc_out=enc_out,
+                                    return_cache=collect_cache)
+                if collect_cache:
+                    h, cb = out
+                    cbits.append(cb)
+                else:
+                    h = out
+            if collect_cache:
+                return h, jax.tree.map(lambda *a: jnp.stack(a), *cbits)
+            return h, None
+
+        x, caches = jax.lax.scan(_remat(cfg, gbody), x, grouped)
+        if collect_cache:
+            # (n_groups, p, ...) -> (L, ...)
+            caches = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), caches)
+    elif cfg.scan_layers:
+        x, caches = jax.lax.scan(_remat(cfg, body), x,
+                                 (params["layers"], windows))
+    else:
+        # unrolled path: used by the roofline L1/L2 extrapolation, where
+        # cost_analysis must see every layer (scan bodies are counted once).
+        # With layer_group > 1 the windows become static (banded attention).
+        # NB: a static window must be CLOSED OVER, not passed as an argument —
+        # jax.checkpoint traces its args, which would silently turn the python
+        # int into a tracer and fall back to the masked full sweep.
+        ys = []
+        static_w = [int(w) for w in cfg.layer_windows()]
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            if cfg.layer_group > 1:
+                rbody = _remat(cfg, lambda h, lp_, _w=static_w[i]:
+                               body(h, (lp_, _w)))
+                x, y = rbody(x, lp)
+            else:
+                rbody = _remat(cfg, body)
+                x, y = rbody(x, (lp, windows[i]))
+            ys.append(y)
+        caches = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+                  if collect_cache else None)
+    if cfg.meta_tokens > 0:
+        x = x[:, cfg.meta_tokens:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def logits_from_hidden(params, h, cfg):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head.astype(h.dtype)).astype(jnp.float32)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            mesh: Optional[Mesh] = None) -> jax.Array:
+    h, _ = forward(params, batch["tokens"], cfg, mesh,
+                   extra={k: v for k, v in batch.items()
+                          if k not in ("tokens", "labels")})
+    labels = batch["labels"]
+    if cfg.loss_chunk and cfg.loss_chunk < h.shape[1]:
+        C = cfg.loss_chunk
+        nch = h.shape[1] // C
+        hc = h[:, : nch * C].reshape(h.shape[0], nch, C, -1).transpose(1, 0, 2, 3)
+        lc = labels[:, : nch * C].reshape(labels.shape[0], nch, C).transpose(1, 0, 2)
+
+        def chunk_loss(carry, xs):
+            hh, ll = xs
+            logits = logits_from_hidden(params, hh, cfg)
+            valid = (ll != -1).sum()
+            return carry, (cross_entropy(logits, ll), valid)
+
+        _, (losses, counts) = jax.lax.scan(chunk_loss, 0.0, (hc, lc))
+        w = counts.astype(jnp.float32)
+        return jnp.sum(losses * w) / jnp.maximum(jnp.sum(w), 1.0)
+    logits = logits_from_hidden(params, h, cfg)
+    return cross_entropy(logits, labels)
+
+
+# --------------------------------------------------------------------- cache
+
+
+def cache_schema(cfg: ArchConfig, batch: int, cache_seq: int
+                 ) -> Dict[str, Spec]:
+    """Allocation-free cache description (shapes + logical sharding axes)."""
+    L, KV, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
+    s: Dict[str, Spec] = {"len": Spec((batch,), ("cache_batch",), "zeros")}
+    if not cfg.attn_free:
+        kv_shape = (L, batch, KV, cache_seq, hd)
+        axes = ("layers", "cache_batch", "kv_heads", "cache_seq", "head_dim")
+        s["k"] = Spec(kv_shape, axes, "zeros")
+        s["v"] = Spec(kv_shape, axes, "zeros")
+    if cfg.attn_free or cfg.hybrid:
+        dims = SSM.ssm_dims(cfg)
+        s["conv"] = Spec((L, batch, dims["conv_dim"], cfg.ssm_conv - 1),
+                         ("layers", "cache_batch", "mlp", None), "zeros")
+        s["h"] = Spec((L, batch, dims["n_heads"], cfg.ssm_head_dim,
+                       cfg.ssm_state),
+                      ("layers", "cache_batch", None, None, "state"), "zeros")
+    if cfg.is_encdec:
+        xkv = (L, batch, KV, cfg.encoder_seq, hd)
+        axes = ("layers", "cache_batch", "kv_heads", None, "head_dim")
+        s["xk"] = Spec(xkv, axes, "zeros")
+        s["xv"] = Spec(xkv, axes, "zeros")
+    return s
+
+
+def prefill(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            cache_seq: int, mesh: Optional[Mesh] = None):
+    """Run the prompt, build caches sized ``cache_seq``, return last logits."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h, caches = forward(params, tokens, cfg, mesh,
+                        extra={k: v for k, v in batch.items()
+                               if k != "tokens"},
+                        collect_cache=True)
+    logits = logits_from_hidden(params, h[:, -1:], cfg)
+    kv, ssm_state, xkv = caches
+    out: Dict[str, jax.Array] = {
+        "len": jnp.full((B,), S + cfg.meta_tokens, jnp.int32)}
+    if kv is not None:
+        k, v = kv                                  # (L, B, KV, S(+meta), hd)
+        pad = cache_seq - k.shape[3]
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        out["k"], out["v"] = k, v
+    if ssm_state is not None:
+        conv, hs = ssm_state
+        out["conv"], out["h"] = conv, hs
+    if xkv is not None:
+        out["xk"], out["xv"] = xkv
+    return logits, out
+
+
+def decode_step(params, cache: Dict[str, jax.Array], tokens: jax.Array,
+                cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                extra: Optional[Dict[str, jax.Array]] = None):
+    """One greedy decode step. tokens (B, 1) -> (logits (B,1,V), new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", "seq", "embed"), mesh, activation_rules(cfg))
+    new_len = cache["len"] + 1
+    windows = jnp.asarray(cfg.layer_windows())
+    layer_keys = [k for k in ("k", "v", "conv", "h", "xk", "xv") if k in cache]
+
+    def body(h, xs):
+        lp, w = xs[0], xs[1]
+        cache_slice = dict(zip(layer_keys, xs[2:]))
+        h, upd = decoder_layer_decode(cfg, lp, h, cache_slice=cache_slice,
+                                      new_len=new_len, window=w, mesh=mesh)
+        return h, tuple(upd[k] for k in layer_keys)
+
+    xs = (params["layers"], windows) + tuple(cache[k] for k in layer_keys)
+    if cfg.scan_layers:
+        x, updated = jax.lax.scan(body, x, xs)
+    else:
+        ys = []
+        for i in range(cfg.n_layers):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        updated = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, x, cfg)
+    new_cache = dict(zip(layer_keys, updated))
+    new_cache["len"] = new_len
+    return logits, new_cache

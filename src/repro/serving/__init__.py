@@ -1,0 +1,3 @@
+from .rag import ContextDatabase, RAGConfig, RAGServer
+
+__all__ = ["ContextDatabase", "RAGConfig", "RAGServer"]

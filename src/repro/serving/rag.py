@@ -1,0 +1,159 @@
+"""Directory-scoped RAG / agent-context serving (the OpenViking deployment of
+§IV-C, on our stack).
+
+Pipeline per request batch:
+  1. DSQ: TrieHI resolves the ``viking://``-style directory scope (recursive
+     or not, with exclusions) to a candidate entry set.
+  2. Scoped vector ranking inside the candidate set (tiered L0/L1/L2 entries
+     share the directory scope; budget picks the tier).
+  3. Context assembly under a token budget (L0 abstracts first, escalate to
+     L2 bodies only for the top hits — OpenViking's tiered context loading).
+  4. Batched LM decode over the assembled contexts.
+
+The vector side and the LM side are both first-class here: DSM ops (memory
+consolidation, subtree reorganization) run against the same database between
+serving steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..vectordb import DirectoryVectorDB
+
+TIERS = ("L0", "L1", "L2")
+
+
+@dataclasses.dataclass
+class ContextEntry:
+    entry_id: int
+    path: str
+    tier: str
+    text_tokens: np.ndarray          # pre-tokenized payload
+
+
+@dataclasses.dataclass
+class RAGConfig:
+    k: int = 10
+    token_budget: int = 512
+    escalate_top: int = 3            # top hits get L2 bodies
+    executor: str = "flat"
+
+
+class ContextDatabase:
+    """Tiered directory-scoped context store (OpenViking-style)."""
+
+    def __init__(self, dim: int, scope_strategy: str = "triehi"):
+        self.db = DirectoryVectorDB(dim=dim, scope_strategy=scope_strategy)
+        self.payloads: Dict[int, ContextEntry] = {}
+
+    def add_context(self, vector: np.ndarray, path: str, tier: str,
+                    text_tokens: np.ndarray) -> int:
+        assert tier in TIERS
+        (eid,) = self.db.ingest(vector[None, :], [path])
+        self.payloads[int(eid)] = ContextEntry(int(eid), path, tier,
+                                               np.asarray(text_tokens))
+        return int(eid)
+
+    def build(self, executor: str = "flat", **params) -> None:
+        self.db.build_ann(executor, **params)
+
+    # context management = DSM on the same hierarchy
+    def reorganize(self, op: str, src: str, dst: str) -> None:
+        if op == "move":
+            self.db.move(src, dst)
+        elif op == "merge":
+            self.db.merge(src, dst)
+        else:
+            raise ValueError(op)
+
+    def retrieve(self, query_vec: np.ndarray, scope: str, cfg: RAGConfig,
+                 recursive: bool = True, exclude: Sequence[str] = ()
+                 ) -> Tuple[List[ContextEntry], Dict[str, float]]:
+        res = self.db.dsq(query_vec[None, :], scope, k=cfg.k,
+                          recursive=recursive, exclude=exclude,
+                          executor=cfg.executor)
+        hits = [self.payloads[int(i)] for i in res.ids[0] if int(i) >= 0]
+        stats = {"directory_us": res.directory_ns / 1e3,
+                 "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size}
+        return hits, stats
+
+    def assemble(self, hits: List[ContextEntry], cfg: RAGConfig
+                 ) -> np.ndarray:
+        """Token-budgeted context: escalate only the top hits to full bodies
+        (tiered loading); returns a 1-D token array."""
+        parts: List[np.ndarray] = []
+        used = 0
+        for rank, h in enumerate(hits):
+            toks = h.text_tokens
+            if h.tier == "L2" and rank >= cfg.escalate_top:
+                toks = toks[: max(8, len(toks) // 4)]    # abstract-level slice
+            take = min(len(toks), cfg.token_budget - used)
+            if take <= 0:
+                break
+            parts.append(toks[:take])
+            used += take
+        if not parts:
+            return np.zeros(1, dtype=np.int32)
+        return np.concatenate(parts).astype(np.int32)
+
+
+class RAGServer:
+    """Batched scoped-retrieval + greedy decode."""
+
+    def __init__(self, ctx_db: ContextDatabase, lm_params, lm_cfg,
+                 cfg: RAGConfig, mesh=None):
+        from ..models import decode_step, prefill
+        self.ctx = ctx_db
+        self.params = lm_params
+        self.lm_cfg = lm_cfg
+        self.cfg = cfg
+        self.mesh = mesh
+        self._prefill = prefill
+        self._decode = decode_step
+
+    def answer(self, query_vecs: np.ndarray, scopes: Sequence[str],
+               prompts: Sequence[np.ndarray], max_new_tokens: int = 16,
+               recursive: bool = True) -> Dict[str, object]:
+        t0 = time.perf_counter()
+        contexts, retrieval_stats = [], []
+        for qv, scope in zip(query_vecs, scopes):
+            hits, stats = self.ctx.retrieve(qv, scope, self.cfg,
+                                            recursive=recursive)
+            contexts.append(self.assemble_with_prompt(hits, prompts))
+            retrieval_stats.append(stats)
+        t1 = time.perf_counter()
+        # pad to a rectangle for the batched LM
+        max_len = max(len(c) for c in contexts)
+        B = len(contexts)
+        toks = np.zeros((B, max_len), dtype=np.int32)
+        for i, c in enumerate(contexts):
+            toks[i, : len(c)] = c
+        cache_seq = max_len + self.lm_cfg.meta_tokens + max_new_tokens
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      self.lm_cfg, cache_seq, self.mesh)
+        out_tokens = []
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            out_tokens.append(np.asarray(cur)[:, 0])
+            logits, cache = self._decode(self.params, cache, cur, self.lm_cfg,
+                                         self.mesh)
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        t2 = time.perf_counter()
+        return {
+            "tokens": np.stack(out_tokens, axis=1),
+            "retrieval_stats": retrieval_stats,
+            "retrieve_s": t1 - t0,
+            "decode_s": t2 - t1,
+        }
+
+    def assemble_with_prompt(self, hits, prompts) -> np.ndarray:
+        ctx = self.ctx.assemble(hits, self.cfg)
+        prompt = prompts[0] if len(prompts) else np.zeros(0, np.int32)
+        return np.concatenate([ctx, np.asarray(prompt, np.int32)])

@@ -1,0 +1,8 @@
+from .database import DSQResult, DirectoryVectorDB
+from .flat import FlatExecutor
+from .graph import PGIndex
+from .ivf import IVFIndex
+from .store import VectorStore
+
+__all__ = ["DirectoryVectorDB", "DSQResult", "FlatExecutor", "PGIndex",
+           "IVFIndex", "VectorStore"]

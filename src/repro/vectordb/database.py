@@ -1,0 +1,155 @@
+"""DirectoryVectorDB — the paper's system: scope index × ANN executor.
+
+Composes (1) one or more *namespaces* (independent directory hierarchies, e.g.
+ARXIV-Dir's subject + temporal trees), each backed by a pluggable ScopeIndex
+strategy, with (2) a vector store and interchangeable ANN executors. DSQ runs
+scope resolution first, then ranks inside the resolved candidate set; DSM goes
+through the journaled, region-locked executor (§IV-A consistency ordering).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import (DSM, DSMExecutor, DSMJournal, ResolveStats, ScopeIndex,
+                    make_scope_index)
+from .flat import FlatExecutor
+from .graph import PGIndex
+from .ivf import IVFIndex
+from .store import VectorStore
+
+DEFAULT_NS = "fs"
+
+
+@dataclass
+class DSQResult:
+    ids: np.ndarray                  # (q, k) int64, -1 padded
+    scores: np.ndarray               # (q, k) float32
+    scope_size: int
+    directory_ns: int                # directory-only latency (candidate set gen)
+    ann_ns: int                      # executor latency
+    resolve_stats: ResolveStats = field(default_factory=ResolveStats)
+
+    @property
+    def total_ns(self) -> int:
+        return self.directory_ns + self.ann_ns
+
+
+class DirectoryVectorDB:
+    def __init__(self, dim: int, metric: str = "ip",
+                 scope_strategy: str = "triehi",
+                 journal_path: Optional[str] = None):
+        self.store = VectorStore(dim, metric)
+        self.scope_strategy = scope_strategy
+        self.namespaces: Dict[str, ScopeIndex] = {}
+        self.executors: Dict[str, object] = {}
+        self._dsm: Dict[str, DSMExecutor] = {}
+        self._journal_path = journal_path
+        self.namespace(DEFAULT_NS)  # default filesystem namespace
+
+    # -------------------------------------------------------------- plumbing
+    def namespace(self, name: str) -> ScopeIndex:
+        if name not in self.namespaces:
+            idx = make_scope_index(self.scope_strategy)
+            self.namespaces[name] = idx
+            journal = DSMJournal(
+                f"{self._journal_path}.{name}" if self._journal_path else None)
+            self._dsm[name] = DSMExecutor(idx, journal)
+        return self.namespaces[name]
+
+    def build_ann(self, kind: str, **params) -> None:
+        if kind == "flat":
+            self.executors["flat"] = FlatExecutor(self.store)
+        elif kind == "ivf":
+            self.executors["ivf"] = IVFIndex(self.store, **params)
+        elif kind == "pg":
+            self.executors["pg"] = PGIndex(self.store, **params)
+        else:
+            raise ValueError(f"unknown ANN executor {kind!r}")
+
+    # ------------------------------------------------------------- ingestion
+    def ingest(self, vectors: np.ndarray,
+               dir_paths: Sequence[str],
+               namespaces: Optional[Dict[str, Sequence[str]]] = None
+               ) -> np.ndarray:
+        """Bulk-insert vectors bound to directories. ``namespaces`` maps extra
+        namespace name -> per-entry path (e.g. subject + temporal trees)."""
+        ids = self.store.add(vectors)
+        ns_paths = {DEFAULT_NS: dir_paths}
+        if namespaces:
+            ns_paths.update(namespaces)
+        for ns_name, paths in ns_paths.items():
+            idx = self.namespace(ns_name)
+            if len(paths) != len(ids):
+                raise ValueError(f"namespace {ns_name}: {len(paths)} paths "
+                                 f"for {len(ids)} vectors")
+            idx.bulk_insert(ids, paths)
+        ivf = self.executors.get("ivf")
+        if ivf is not None:
+            ivf.add(ids)
+        return ids
+
+    def delete(self, entry_id: int) -> None:
+        for idx in self.namespaces.values():
+            if idx.catalog.get(entry_id) is not None:
+                idx.delete(entry_id)
+        # store rows are append-only; deleted ids simply leave every scope.
+
+    # ------------------------------------------------------------------ DSQ
+    def dsq(self, queries: np.ndarray, path: str, k: int = 10,
+            recursive: bool = True, exclude: Sequence[str] = (),
+            namespace: str = DEFAULT_NS, executor: str = "flat",
+            **executor_params) -> DSQResult:
+        idx = self.namespaces[namespace]
+        stats = ResolveStats()
+        t0 = time.perf_counter_ns()
+        if exclude:
+            scope = idx.resolve_exclusion(path, list(exclude),
+                                          recursive=recursive, stats=stats)
+        else:
+            scope = idx.resolve(path, recursive=recursive, stats=stats)
+        candidate_ids = scope.to_array()
+        t1 = time.perf_counter_ns()
+        ex = self.executors.get(executor)
+        if ex is None:
+            raise ValueError(f"executor {executor!r} not built "
+                             f"(have {sorted(self.executors)})")
+        scores, ids = ex.search(queries, k, candidate_ids=candidate_ids,
+                                **executor_params)
+        t2 = time.perf_counter_ns()
+        return DSQResult(ids=ids, scores=scores, scope_size=len(candidate_ids),
+                         directory_ns=t1 - t0, ann_ns=t2 - t1,
+                         resolve_stats=stats)
+
+    # ------------------------------------------------------------------ DSM
+    def move(self, src: str, new_parent: str,
+             namespace: str = DEFAULT_NS) -> None:
+        self._dsm[namespace].apply(DSM("move", src, new_parent))
+
+    def merge(self, src: str, dst: str, namespace: str = DEFAULT_NS) -> None:
+        self._dsm[namespace].apply(DSM("merge", src, dst))
+
+    def mkdir(self, path: str, namespace: str = DEFAULT_NS) -> None:
+        self._dsm[namespace].apply(DSM("mkdir", path))
+
+    # ------------------------------------------------------------ inspection
+    def stats(self) -> Dict[str, object]:
+        return {
+            "entries": len(self.store),
+            "dim": self.store.dim,
+            "metric": self.store.metric,
+            "scope_strategy": self.scope_strategy,
+            "namespaces": {
+                name: {"dirs": len(idx.list_dirs()),
+                       "dir_bytes": idx.memory_bytes()}
+                for name, idx in self.namespaces.items()},
+            "executors": sorted(self.executors),
+            "vector_bytes": self.store.nbytes(),
+        }
+
+    def check_invariants(self) -> None:
+        for idx in self.namespaces.values():
+            idx.check_invariants()

@@ -1,0 +1,91 @@
+"""Flat (brute-force) masked top-k executor — exact oracle + baseline.
+
+Two execution plans, chosen by scope selectivity exactly as selective-filter
+vector databases do (pre- vs post-filter):
+
+* ``gather``: gather the |C| candidate rows and score only those — optimal for
+  selective scopes (|C| << N);
+* ``scan``: score all N rows on the MXU-friendly path and mask invalid lanes
+  to -inf — optimal for broad scopes, and the shape the Pallas ``scoped_topk``
+  kernel implements on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .store import VectorStore
+
+GATHER_THRESHOLD = 0.05   # use gather plan below this scope selectivity
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _scan_topk(queries: jnp.ndarray, rows: jnp.ndarray, mask: jnp.ndarray,
+               k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if metric in ("ip", "cos"):
+        scores = queries @ rows.T
+    else:  # l2: argmax of -(||q||^2 - 2 q.x + ||x||^2) == argmax(2 q.x - ||x||^2)
+        scores = 2.0 * (queries @ rows.T) - jnp.sum(rows * rows, axis=-1)[None, :]
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _gather_topk(queries: jnp.ndarray, cand_rows: jnp.ndarray,
+                 k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if metric in ("ip", "cos"):
+        scores = queries @ cand_rows.T
+    else:
+        scores = 2.0 * (queries @ cand_rows.T) - jnp.sum(
+            cand_rows * cand_rows, axis=-1)[None, :]
+    return jax.lax.top_k(scores, k)
+
+
+class FlatExecutor:
+    name = "flat"
+
+    def __init__(self, store: VectorStore):
+        self.store = store
+
+    def search(self, queries: np.ndarray, k: int,
+               candidate_ids: Optional[np.ndarray] = None,
+               plan: Optional[str] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (scores, ids), both (q, k); ids == -1 past the scope size."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        n = len(self.store)
+        if candidate_ids is None:
+            candidate_ids = np.arange(n, dtype=np.uint32)
+        m = len(candidate_ids)
+        if m == 0:
+            q = queries.shape[0]
+            return (np.full((q, k), -np.inf, np.float32),
+                    np.full((q, k), -1, np.int64))
+        if plan is None:
+            plan = "gather" if m <= max(k, GATHER_THRESHOLD * n) else "scan"
+        kk = min(k, m)
+        if plan == "gather":
+            cand_rows = self.store.vectors[candidate_ids]
+            scores, local = _gather_topk(
+                jnp.asarray(queries), jnp.asarray(cand_rows), kk,
+                self.store.metric)
+            ids = candidate_ids[np.asarray(local)]
+        else:
+            mask = np.zeros(n, dtype=bool)
+            mask[candidate_ids] = True
+            scores, ids = _scan_topk(
+                jnp.asarray(queries), self.store.device_vectors(),
+                jnp.asarray(mask), kk, self.store.metric)
+            ids = np.asarray(ids)
+        scores = np.asarray(scores)
+        if kk < k:  # pad to k
+            pad_s = np.full((queries.shape[0], k - kk), -np.inf, np.float32)
+            pad_i = np.full((queries.shape[0], k - kk), -1, np.int64)
+            scores = np.concatenate([scores, pad_s], axis=1)
+            ids = np.concatenate([np.asarray(ids, np.int64), pad_i], axis=1)
+        return scores, np.asarray(ids, dtype=np.int64)

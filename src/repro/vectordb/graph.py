@@ -1,0 +1,148 @@
+"""Proximity-graph (PG) ANN executor — NSW-style beam search, mask-aware.
+
+Mirrors the paper's graph-based executor behaviour under directory scoping:
+the traversal navigates the *full* graph (connectivity must not depend on the
+scope) but only scope-valid nodes are collected into the result set, so highly
+selective scopes make the search do more traversal work per valid result —
+exactly the PG latency-vs-depth trend of Fig. 11.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .store import VectorStore
+
+
+class PGIndex:
+    name = "pg"
+
+    def __init__(self, store: VectorStore, max_degree: int = 16,
+                 ef_construction: int = 64, seed: int = 0):
+        self.store = store
+        self.max_degree = max_degree
+        self.ef_construction = ef_construction
+        n = len(store)
+        self.neighbors = np.full((n, max_degree), -1, dtype=np.int32)
+        self._n_edges = np.zeros(n, dtype=np.int32)
+        self._rng = np.random.default_rng(seed)
+        self._build()
+
+    # ------------------------------------------------------------------ build
+    def _distances(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        rows = self.store.vectors[ids]
+        if self.store.metric in ("ip", "cos"):
+            return -(rows @ q)                       # smaller = closer
+        diff = rows - q
+        return np.einsum("nd,nd->n", diff, diff)
+
+    def _build(self) -> None:
+        n = len(self.store)
+        if n == 0:
+            return
+        order = self._rng.permutation(n)
+        inserted = [int(order[0])]
+        for idx in order[1:]:
+            idx = int(idx)
+            cand, _ = self._beam(self.store.vectors[idx],
+                                 entry=inserted[self._rng.integers(len(inserted))],
+                                 ef=self.ef_construction,
+                                 limit_ids=len(inserted), inserted=True)
+            links = cand[: self.max_degree]
+            for nb in links:
+                self._connect(idx, int(nb))
+                self._connect(int(nb), idx)
+            inserted.append(idx)
+
+    def _connect(self, a: int, b: int) -> None:
+        if a == b:
+            return
+        ne = self._n_edges[a]
+        row = self.neighbors[a]
+        if b in row[:ne]:
+            return
+        if ne < self.max_degree:
+            row[ne] = b
+            self._n_edges[a] = ne + 1
+            return
+        # prune: keep the max_degree closest links
+        cand = np.concatenate([row[:ne], [b]])
+        d = self._distances(self.store.vectors[a], cand)
+        keep = cand[np.argsort(d)[: self.max_degree]]
+        self.neighbors[a, : len(keep)] = keep
+        self._n_edges[a] = len(keep)
+
+    # ----------------------------------------------------------------- search
+    def _beam(self, q: np.ndarray, entry: int, ef: int,
+              limit_ids: Optional[int] = None, inserted: bool = False,
+              valid_mask: Optional[np.ndarray] = None, k: Optional[int] = None
+              ) -> Tuple[np.ndarray, int]:
+        """Best-first beam search; returns (ids best-first, hops). When
+        ``valid_mask`` is given, only valid ids enter the *result* heap but all
+        nodes are traversable (mask-aware post-collection)."""
+        visited = {entry}
+        d0 = float(self._distances(q, np.asarray([entry]))[0])
+        frontier = [(d0, entry)]                       # min-heap by distance
+        # result: max-heap of (−distance, id), only scope-valid ids
+        result: list = []
+        if valid_mask is None or valid_mask[entry]:
+            result.append((-d0, entry))
+        hops = 0
+        target = ef if k is None else max(ef, k)
+        while frontier:
+            d, node = heapq.heappop(frontier)
+            if result and len(result) >= target and d > -result[0][0]:
+                break
+            hops += 1
+            nbrs = self.neighbors[node][: self._n_edges[node]]
+            nbrs = [int(x) for x in nbrs if int(x) not in visited]
+            if limit_ids is not None:
+                nbrs = [x for x in nbrs if x < limit_ids or inserted]
+            if not nbrs:
+                continue
+            visited.update(nbrs)
+            dists = self._distances(q, np.asarray(nbrs))
+            for nb, dist in zip(nbrs, dists):
+                dist = float(dist)
+                if (not result or len(result) < target
+                        or dist < -result[0][0]):
+                    heapq.heappush(frontier, (dist, nb))
+                    if valid_mask is None or valid_mask[nb]:
+                        heapq.heappush(result, (-dist, nb))
+                        if len(result) > target:
+                            heapq.heappop(result)
+        ordered = sorted(((-nd, i) for nd, i in result))
+        return np.asarray([i for _, i in ordered], dtype=np.int64), hops
+
+    def nbytes(self) -> int:
+        return self.neighbors.nbytes + self._n_edges.nbytes
+
+    def search(self, queries: np.ndarray, k: int,
+               candidate_ids: Optional[np.ndarray] = None,
+               ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        nq = queries.shape[0]
+        n = len(self.store)
+        valid = None
+        if candidate_ids is not None:
+            valid = np.zeros(n, dtype=bool)
+            valid[candidate_ids] = True
+        out_scores = np.full((nq, k), -np.inf, dtype=np.float32)
+        out_ids = np.full((nq, k), -1, dtype=np.int64)
+        for qi in range(nq):
+            entry = int(self._rng.integers(n))
+            ids, _ = self._beam(queries[qi], entry, ef_search,
+                                valid_mask=valid, k=k)
+            ids = ids[:k]
+            if len(ids) == 0:
+                continue
+            rows = self.store.vectors[ids]
+            if self.store.metric in ("ip", "cos"):
+                scores = rows @ queries[qi]
+            else:
+                scores = 2.0 * rows @ queries[qi] - np.sum(rows * rows, axis=1)
+            out_scores[qi, : len(ids)] = scores
+            out_ids[qi, : len(ids)] = ids
+        return out_scores, out_ids

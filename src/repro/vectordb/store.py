@@ -1,0 +1,69 @@
+"""Vector store: host-resident rows + lazily-cached device array.
+
+Entry ids are row indices (uint32), the same ids kept in the scope indexes'
+RoaringBitmaps — the hand-off between the directory layer and the ANN executor
+is therefore a pure id-set/bitmask, per the paper's execution model (§II-A).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+METRICS = ("ip", "l2", "cos")
+
+
+class VectorStore:
+    def __init__(self, dim: int, metric: str = "ip", capacity: int = 1024):
+        if metric not in METRICS:
+            raise ValueError(f"metric {metric!r} not in {METRICS}")
+        self.dim = dim
+        self.metric = metric
+        self._rows = np.zeros((capacity, dim), dtype=np.float32)
+        self._n = 0
+        self._device_cache: Optional[jnp.ndarray] = None
+        self._norms_cache: Optional[np.ndarray] = None
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def vectors(self) -> np.ndarray:
+        return self._rows[: self._n]
+
+    def add(self, vectors: np.ndarray) -> np.ndarray:
+        """Append rows; returns assigned entry ids."""
+        vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
+        if vectors.shape[1] != self.dim:
+            raise ValueError(f"dim mismatch: {vectors.shape[1]} != {self.dim}")
+        n_new = vectors.shape[0]
+        while self._n + n_new > self._rows.shape[0]:
+            grown = np.zeros((max(2 * self._rows.shape[0], self._n + n_new),
+                              self.dim), dtype=np.float32)
+            grown[: self._n] = self._rows[: self._n]
+            self._rows = grown
+        if self.metric == "cos":
+            norms = np.linalg.norm(vectors, axis=1, keepdims=True)
+            vectors = vectors / np.maximum(norms, 1e-12)
+        self._rows[self._n: self._n + n_new] = vectors
+        ids = np.arange(self._n, self._n + n_new, dtype=np.uint32)
+        self._n += n_new
+        self._device_cache = None
+        self._norms_cache = None
+        return ids
+
+    def device_vectors(self) -> jnp.ndarray:
+        if self._device_cache is None or self._device_cache.shape[0] != self._n:
+            self._device_cache = jnp.asarray(self.vectors)
+        return self._device_cache
+
+    def sq_norms(self) -> np.ndarray:
+        if self._norms_cache is None or self._norms_cache.shape[0] != self._n:
+            self._norms_cache = np.einsum(
+                "nd,nd->n", self.vectors, self.vectors).astype(np.float32)
+        return self._norms_cache
+
+    def nbytes(self) -> int:
+        return self._n * self.dim * 4

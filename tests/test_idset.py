@@ -1,0 +1,79 @@
+"""RoaringBitmap: property tests against Python sets (the obvious oracle)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.idset import ARRAY_MAX, RoaringBitmap
+
+ids = st.lists(st.integers(0, 1 << 20), max_size=300)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ids, ids)
+def test_set_algebra_matches_python_sets(a, b):
+    ra, rb = RoaringBitmap(a), RoaringBitmap(b)
+    sa, sb = set(a), set(b)
+    assert set(ra.to_array().tolist()) == sa
+    assert set((ra | rb).to_array().tolist()) == sa | sb
+    assert set((ra & rb).to_array().tolist()) == sa & sb
+    assert set((ra - rb).to_array().tolist()) == sa - sb
+    assert len(ra) == len(sa)
+    for x in list(sa)[:10]:
+        assert x in ra
+
+
+@settings(max_examples=30, deadline=None)
+@given(ids, ids)
+def test_inplace_ops(a, b):
+    ra, rb = RoaringBitmap(a), RoaringBitmap(b)
+    sa, sb = set(a), set(b)
+    ra |= rb
+    assert set(ra.to_array().tolist()) == sa | sb
+    ra -= rb
+    assert set(ra.to_array().tolist()) == (sa | sb) - sb
+
+
+@settings(max_examples=30, deadline=None)
+@given(ids, st.lists(st.integers(0, 1 << 20), max_size=50))
+def test_remove(a, rm):
+    ra = RoaringBitmap(a)
+    ra.remove_many(np.asarray(rm, np.uint32))
+    assert set(ra.to_array().tolist()) == set(a) - set(rm)
+
+
+def test_container_promotion_and_demotion():
+    # force a dense container (> ARRAY_MAX within one 64k chunk)
+    ids = np.arange(ARRAY_MAX + 100, dtype=np.uint32)
+    r = RoaringBitmap.from_array(ids)
+    assert r.stats()["bitmap_containers"] == 1
+    # difference that drops it back below the threshold
+    r -= RoaringBitmap.from_array(ids[: ARRAY_MAX])
+    assert len(r) == 100
+    assert set(r.to_array().tolist()) == set(range(ARRAY_MAX, ARRAY_MAX + 100))
+
+
+def test_dense_mask_and_words():
+    ids = [0, 5, 31, 32, 63, 1000]
+    r = RoaringBitmap(ids)
+    mask = r.to_bool_mask(1024)
+    assert sorted(np.nonzero(mask)[0].tolist()) == sorted(set(ids))
+    words = r.to_words(1024)
+    assert words.dtype == np.uint32
+    unpacked = np.unpackbits(words.view(np.uint8), bitorder="little")
+    assert sorted(np.nonzero(unpacked)[0].tolist()) == sorted(set(ids))
+
+
+def test_union_many_and_copy_isolation():
+    parts = [RoaringBitmap(range(i, i + 10)) for i in range(0, 100, 10)]
+    u = RoaringBitmap.union_many(parts)
+    assert len(u) == 100
+    c = u.copy()
+    c.remove(0)
+    assert 0 in u and 0 not in c
+
+
+def test_equality_and_empty():
+    assert RoaringBitmap([1, 2]) == RoaringBitmap([2, 1])
+    assert not RoaringBitmap()
+    assert len(RoaringBitmap()) == 0
+    assert RoaringBitmap().to_array().shape == (0,)

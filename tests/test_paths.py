@@ -1,0 +1,47 @@
+import pytest
+
+from repro.core import paths as P
+
+
+def test_parse_and_render():
+    assert P.parse("/a/b/") == ("a", "b")
+    assert P.parse("/a/b") == ("a", "b")
+    assert P.parse("a/b/") == ("a", "b")
+    assert P.parse("/") == ()
+    assert P.parse(("x",)) == ("x",)
+    assert P.to_str(("a", "b")) == "/a/b/"
+    assert P.to_str(()) == "/"
+
+
+def test_parse_rejects_relative():
+    with pytest.raises(ValueError):
+        P.parse("/a/../b/")
+
+
+def test_ancestors_and_relations():
+    p = P.parse("/a/b/c/")
+    assert list(P.ancestors(p)) == [(), ("a",), ("a", "b"), ("a", "b", "c")]
+    assert list(P.ancestors(p, include_self=False))[-1] == ("a", "b")
+    assert P.is_ancestor((), p)
+    assert P.is_ancestor(("a",), p, proper=True)
+    assert not P.is_ancestor(p, p, proper=True)
+    assert P.is_ancestor(p, p)
+    assert not P.is_ancestor(("a", "x"), p)
+
+
+def test_prefix_ops():
+    assert P.replace_prefix(("a", "b", "c"), ("a",), ("z", "y")) == \
+        ("z", "y", "b", "c")
+    with pytest.raises(ValueError):
+        P.replace_prefix(("a", "b"), ("x",), ("z",))
+    assert P.common_prefix(("a", "b", "c"), ("a", "b", "z")) == ("a", "b")
+    assert P.common_prefix(("a",), ("b",)) == ()
+    assert P.relative(("a", "b", "c"), ("a",)) == ("b", "c")
+
+
+def test_validate_disjoint():
+    P.validate_disjoint(("a",), ("b",))
+    with pytest.raises(ValueError):
+        P.validate_disjoint(("a",), ("a", "b"))
+    with pytest.raises(ValueError):
+        P.validate_disjoint(("a", "b"), ("a",))

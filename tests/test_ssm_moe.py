@@ -1,0 +1,126 @@
+"""Mamba-2 SSD and MoE layer correctness (beyond the per-arch smoke)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.common import ArchConfig
+from repro.models.layers import init_params
+
+RNG = np.random.default_rng(0)
+
+
+def _ssm_cfg(**kw):
+    base = dict(name="t", family="ssm", n_layers=1, d_model=32, n_heads=4,
+                d_ff=0, vocab_size=100, ssm_state=16, ssm_expand=2,
+                ssm_head_dim=8, ssm_groups=2, ssm_chunk=8, dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_ssd_chunked_equals_sequential_recurrence():
+    cfg = _ssm_cfg()
+    dims = SSM.ssm_dims(cfg)
+    B, L, H, hd, N = 2, 24, dims["n_heads"], cfg.ssm_head_dim, cfg.ssm_state
+    xh = RNG.normal(size=(B, L, H, hd)).astype(np.float32)
+    dt = np.abs(RNG.normal(size=(B, L, H))).astype(np.float32) * 0.5
+    A = -np.abs(RNG.normal(size=(H,))).astype(np.float32)
+    Bm = RNG.normal(size=(B, L, H, N)).astype(np.float32)
+    Cm = RNG.normal(size=(B, L, H, N)).astype(np.float32)
+    y, hf = SSM._ssd_chunked(jnp.asarray(xh), jnp.asarray(dt), jnp.asarray(A),
+                             jnp.asarray(Bm), jnp.asarray(Cm), chunk=8)
+    h = np.zeros((B, H, hd, N), np.float32)
+    yref = np.zeros((B, L, H, hd), np.float32)
+    for t in range(L):
+        a = np.exp(dt[:, t] * A[None, :])
+        xb = xh[:, t] * dt[:, t][..., None]
+        h = h * a[..., None, None] + np.einsum("bhp,bhn->bhpn", xb, Bm[:, t])
+        yref[:, t] = np.einsum("bhpn,bhn->bhp", h, Cm[:, t])
+    np.testing.assert_allclose(np.asarray(y), yref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), h, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunk_size_invariance(chunk):
+    """ssm_chunk is a pure performance knob — outputs must not change
+    (the §Perf hymba iteration relies on this)."""
+    cfg = _ssm_cfg(ssm_chunk=chunk)
+    params = init_params(SSM.ssm_schema(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 16, 32)).astype(np.float32))
+    ref_cfg = _ssm_cfg(ssm_chunk=16)
+    y = SSM.ssm_apply(params, x, cfg)
+    yr = SSM.ssm_apply(params, x, ref_cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssm_train_equals_incremental_decode():
+    cfg = _ssm_cfg()
+    dims = SSM.ssm_dims(cfg)
+    params = init_params(SSM.ssm_schema(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    B, L = 2, 12
+    x = jnp.asarray(RNG.normal(size=(B, L, cfg.d_model)).astype(np.float32))
+    y_train, (conv_f, h_f) = SSM.ssm_apply(params, x, cfg, return_state=True)
+    conv = jnp.zeros((B, dims["conv_dim"], cfg.ssm_conv - 1), jnp.float32)
+    h = jnp.zeros((B, dims["n_heads"], cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32)
+    outs = []
+    for t in range(L):
+        o, conv, h = SSM.ssm_decode_step(params, x[:, t:t + 1], cfg, conv, h)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(y_train),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_f), np.asarray(h), rtol=2e-3,
+                               atol=2e-3)
+
+
+def _moe_cfg(**kw):
+    base = dict(name="t", family="moe", n_layers=1, d_model=32, n_heads=4,
+                d_ff=64, vocab_size=100, n_experts=8, moe_top_k=2,
+                n_shared_experts=1, moe_d_ff=16, capacity_factor=8.0,
+                dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_moe_grouped_equals_dense_reference():
+    cfg = _moe_cfg()
+    params = init_params(MOE.moe_schema(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 12, 32)).astype(np.float32))
+    y1 = MOE.moe_apply(params, x, cfg, mesh=None)
+    y2 = MOE.moe_apply(params, x, cfg.replace(moe_impl="dense_tp"), mesh=None)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity_factor << 1 some tokens must be dropped (shared experts
+    still serve them) — output differs from the dropless dense path."""
+    cfg = _moe_cfg(capacity_factor=0.01, n_shared_experts=0)
+    params = init_params(MOE.moe_schema(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(4, 64, 32)).astype(np.float32))
+    y1 = MOE.moe_apply(params, x, cfg, mesh=None)
+    y2 = MOE.moe_apply(params, x, cfg.replace(moe_impl="dense_tp"),
+                       mesh=None)
+    assert not np.allclose(np.asarray(y1), np.asarray(y2), atol=1e-3)
+
+
+def test_moe_grads_finite():
+    cfg = _moe_cfg()
+    params = init_params(MOE.moe_schema(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 8, 32)).astype(np.float32))
+
+    def loss(p):
+        return jnp.sum(MOE.moe_apply(p, x, cfg, mesh=None) ** 2)
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()

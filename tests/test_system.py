@@ -1,0 +1,111 @@
+"""End-to-end behaviour of the paper's system: synthetic WIKI-Dir twin,
+all three strategies × {flat, IVF} executors, DSQ quality + DSM consistency +
+the OpenViking-style RAG pipeline on top."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import smoke_config
+from repro.core import STRATEGIES
+from repro.datasets import brute_force_ground_truth, make_wiki_dir
+from repro.models import model_schema
+from repro.models.layers import init_params
+from repro.serving.rag import ContextDatabase, RAGConfig, RAGServer
+from repro.vectordb import DirectoryVectorDB
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_dir(scale=0.001, dim=32, n_queries=10, seed=11)
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_end_to_end_scoped_retrieval(strategy, wiki):
+    db = DirectoryVectorDB(dim=32, scope_strategy=strategy)
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    gt = brute_force_ground_truth(wiki, k=10)
+    for qi in range(len(wiki.queries)):
+        r = db.dsq(wiki.queries[qi], wiki.query_anchors[qi], k=10,
+                   recursive=bool(wiki.query_recursive[qi]))
+        want = set(gt[qi][gt[qi] >= 0].tolist())
+        got = set(r.ids[0][r.ids[0] >= 0].tolist())
+        assert got == want, (strategy, qi)
+    db.check_invariants()
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_dsm_workload_preserves_retrieval(strategy, wiki):
+    """Apply the MOVE/MERGE workload; scoped retrieval must stay exact w.r.t.
+    a freshly-built index over the final layout (strategies agree)."""
+    db = DirectoryVectorDB(dim=32, scope_strategy=strategy)
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    applied = []
+    for src, dst in wiki.moves[:10] + wiki.merges[:10]:
+        kind = "move" if (src, dst) in wiki.moves[:10] else "merge"
+        try:
+            (db.move if kind == "move" else db.merge)(src, dst)
+            applied.append((kind, src, dst))
+        except (KeyError, ValueError):
+            pass
+    assert applied, "no DSM op applied"
+    db.check_invariants()
+    # rebuild a reference index with the post-DSM entry locations
+    ref = DirectoryVectorDB(dim=32, scope_strategy="triehi")
+    paths = [
+        "/" + "/".join(db.namespaces["fs"].entry_dir(i) or ()) + "/"
+        for i in range(wiki.n_entries)]
+    paths = [p if p != "//" else "/" for p in paths]
+    ref.ingest(wiki.vectors, paths)
+    ref.build_ann("flat")
+    q = wiki.queries[0]
+    for anchor in ["/", wiki.query_anchors[0]]:
+        a = db.dsq(q, anchor, k=10)
+        b = ref.dsq(q, anchor, k=10)
+        assert set(a.ids[0].tolist()) == set(b.ids[0].tolist())
+
+
+def test_openviking_rag_pipeline(wiki):
+    """Tiered context store + scoped retrieval + tiny-LM batched decode."""
+    dim = 32
+    ctx = ContextDatabase(dim=dim)
+    rng = np.random.default_rng(0)
+    for i in range(min(wiki.n_entries, 300)):
+        tier = ("L0", "L1", "L2")[i % 3]
+        toks = rng.integers(0, 200, size=8 + (i % 3) * 8)
+        ctx.add_context(wiki.vectors[i], wiki.entry_paths[i], tier, toks)
+    ctx.build("flat")
+    # context reorganization (agent memory consolidation) = DSM
+    dirs = [d for d in ctx.db.namespaces["fs"].list_dirs() if len(d) == 1]
+    if len(dirs) >= 2:
+        try:
+            ctx.reorganize("merge", "/" + dirs[0][0] + "/",
+                           "/" + dirs[1][0] + "/")
+        except (KeyError, ValueError):
+            pass
+    ctx.db.check_invariants()
+
+    cfg = smoke_config("qwen3-0.6b").replace(vocab_size=256)
+    params = init_params(model_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype())
+    server = RAGServer(ctx, params, cfg, RAGConfig(k=5, token_budget=48))
+    out = server.answer(
+        query_vecs=wiki.queries[:2], scopes=["/", "/"],
+        prompts=[np.arange(4, dtype=np.int32)], max_new_tokens=3)
+    assert out["tokens"].shape == (2, 3)
+    assert all(s["scope_size"] > 0 for s in out["retrieval_stats"])
+
+
+def test_tiered_budget_assembly():
+    ctx = ContextDatabase(dim=8)
+    rng = np.random.default_rng(1)
+    for i in range(20):
+        ctx.add_context(rng.normal(size=8).astype(np.float32),
+                        "/m/", "L2", np.arange(100, dtype=np.int32))
+    ctx.build("flat")
+    cfg = RAGConfig(k=10, token_budget=64, escalate_top=2)
+    hits, _ = ctx.retrieve(np.zeros(8, np.float32), "/m/", cfg)
+    toks = ctx.assemble(hits, cfg)
+    assert len(toks) <= 64

@@ -1,0 +1,131 @@
+"""Optimizer, data determinism, checkpoint/restart, DSM journal recovery."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import DSM, DSMExecutor, DSMJournal, make_scope_index
+from repro.models import loss_fn, model_schema
+from repro.models.layers import init_params
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def test_loss_decreases_on_tiny_model():
+    cfg = smoke_config("qwen3-0.6b").replace(n_layers=1, d_model=32,
+                                             d_ff=64, vocab_size=64,
+                                             head_dim=8, n_kv_heads=2)
+    params = init_params(model_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype())
+    opt_state = init_opt_state(params)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 32, 8))
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=3e-3, total_steps=60,
+                                                  warmup_steps=5)))
+    losses = []
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1, (
+        losses[:5], losses[-5:])
+
+
+def test_grad_accum_matches_big_batch():
+    cfg = smoke_config("qwen3-0.6b").replace(n_layers=1, d_model=32, d_ff=64,
+                                             vocab_size=64, head_dim=8,
+                                             n_kv_heads=2)
+    params = init_params(model_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype())
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, 16, 8))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    opt = OptConfig(lr=1e-3)
+    s1 = make_train_step(cfg, opt, accum_steps=1)
+    s4 = make_train_step(cfg, opt, accum_steps=4)
+    p1, _, m1 = s1(params, init_opt_state(params), batch)
+    p4, _, m4 = s4(params, init_opt_state(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-2, atol=3e-4)
+
+
+def test_data_determinism_and_structure():
+    data = SyntheticLMData(DataConfig(vocab_size=128, seq_len=32,
+                                      global_batch=4, seed=7))
+    b1, b2 = data.batch(5), data.batch(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["labels"], b2["labels"])
+    assert not np.array_equal(data.batch(6)["tokens"], b1["tokens"])
+    # labels are next-token-shifted
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"w": jnp.arange(8, dtype=jnp.float32),
+             "nested": {"b": jnp.ones((2, 3))}}
+    for s in (1, 2, 3):
+        mgr.save(s, state, extra={"loss": 0.5 * s})
+    assert mgr.all_steps() == [2, 3]            # keep=2 GC'd step 1
+    # a crashed save (tmp dir, no manifest) must be invisible
+    (tmp_path / "step_0000000009.tmp").mkdir()
+    (tmp_path / "step_0000000010").mkdir()      # no MANIFEST
+    assert mgr.latest_step() == 3
+    restored, step, extra = mgr.restore(state)
+    assert step == 3 and extra["loss"] == 1.5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.zeros(128)}
+    mgr.save_async(7, state)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_dsm_journal_recovery(tmp_path):
+    jpath = str(tmp_path / "dsm.journal")
+    idx = make_scope_index("triehi")
+    idx.insert(1, "/a/b/")
+    idx.insert(2, "/c/")
+    ex = DSMExecutor(idx, DSMJournal(jpath))
+    ex.apply(DSM("move", "/a/b/", "/c/"))
+    # simulate a crash: write a BEGIN with no COMMIT
+    with open(jpath, "a") as f:
+        f.write(json.dumps({"event": "begin", "seq": 99, "kind": "merge",
+                            "src": "/a/", "dst": "/c/", "ts": 0}) + "\n")
+    suspects = DSMJournal.recover(jpath)
+    assert len(suspects) == 1
+    assert suspects[0].kind == "merge" and suspects[0].src == "/a/"
+
+
+def test_region_locks_serialize_overlaps():
+    from repro.core.ops import RegionLockManager, regions_overlap
+    from repro.core import paths as P
+    assert regions_overlap([P.parse("/a/")], [P.parse("/a/b/")])
+    assert not regions_overlap([P.parse("/a/")], [P.parse("/b/")])
+    mgr = RegionLockManager()
+    t1 = mgr.acquire([P.parse("/a/")])
+    t2 = mgr.acquire([P.parse("/b/")])     # disjoint: no block
+    mgr.release(t1)
+    mgr.release(t2)
+
+
+def test_int8_compression_roundtrip_accuracy():
+    from repro.training.train_step import int8_psum  # noqa: F401  (API exists)
+    # quantization error bound on a single device via the same math
+    g = np.random.default_rng(0).normal(size=(1000,)).astype(np.float32)
+    scale = np.abs(g).max() / 127.0
+    q = np.clip(np.round(g / scale), -127, 127).astype(np.int8)
+    rt = q.astype(np.float32) * scale
+    assert np.abs(rt - g).max() <= scale * 0.5 + 1e-6

@@ -1,0 +1,122 @@
+"""ANN executors + DirectoryVectorDB facade."""
+import numpy as np
+import pytest
+
+from repro.core import make_scope_index
+from repro.datasets import (brute_force_ground_truth, make_arxiv_dir,
+                            make_wiki_dir)
+from repro.vectordb import (DirectoryVectorDB, FlatExecutor, IVFIndex,
+                            PGIndex, VectorStore)
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_dir(scale=0.0015, dim=48, n_queries=12, seed=3)
+
+
+@pytest.fixture(scope="module")
+def db(wiki):
+    db = DirectoryVectorDB(dim=48, scope_strategy="triehi")
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    db.build_ann("ivf", n_lists=16)
+    db.build_ann("pg", max_degree=10, ef_construction=24)
+    return db
+
+
+def test_flat_is_exact(wiki, db):
+    gt = brute_force_ground_truth(wiki, k=10)
+    for qi in range(len(wiki.queries)):
+        r = db.dsq(wiki.queries[qi], wiki.query_anchors[qi], k=10,
+                   recursive=bool(wiki.query_recursive[qi]))
+        want = gt[qi][gt[qi] >= 0]
+        got = r.ids[0][r.ids[0] >= 0]
+        assert set(got.tolist()) == set(want.tolist())
+
+
+def test_flat_gather_and_scan_plans_agree(db, wiki):
+    q = wiki.queries[:4]
+    cand = np.arange(0, len(db.store), 3, dtype=np.uint32)
+    flat = db.executors["flat"]
+    s1, i1 = flat.search(q, 8, candidate_ids=cand, plan="gather")
+    s2, i2 = flat.search(q, 8, candidate_ids=cand, plan="scan")
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+    assert set(map(tuple, i1.tolist())) == set(map(tuple, i2.tolist()))
+
+
+@pytest.mark.parametrize("executor,params,floor", [
+    ("ivf", {"nprobe": 12}, 0.6),
+    ("pg", {"ef_search": 48}, 0.55),
+])
+def test_ann_recall_floor(wiki, db, executor, params, floor):
+    gt = brute_force_ground_truth(wiki, k=10)
+    recalls = []
+    for qi in range(len(wiki.queries)):
+        r = db.dsq(wiki.queries[qi], wiki.query_anchors[qi], k=10,
+                   recursive=bool(wiki.query_recursive[qi]),
+                   executor=executor, **params)
+        want = set(gt[qi][gt[qi] >= 0].tolist())
+        if not want:
+            continue
+        got = set(r.ids[0][r.ids[0] >= 0].tolist())
+        recalls.append(len(got & want) / len(want))
+    assert np.mean(recalls) >= floor, np.mean(recalls)
+
+
+def test_empty_scope_returns_padding(db):
+    db.mkdir("/definitely/empty/")
+    r = db.dsq(np.zeros(48, np.float32), "/definitely/empty/", k=5)
+    assert r.scope_size == 0
+    assert (r.ids == -1).all()
+
+
+def test_dsm_through_facade_keeps_consistency(wiki):
+    db = DirectoryVectorDB(dim=48, scope_strategy="triehi")
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    applied = 0
+    for src, dst in wiki.moves[:15]:
+        try:
+            db.move(src, dst)
+            applied += 1
+        except (KeyError, ValueError):
+            pass
+    for src, dst in wiki.merges[:15]:
+        try:
+            db.merge(src, dst)
+            applied += 1
+        except (KeyError, ValueError):
+            pass
+    assert applied > 0
+    db.check_invariants()
+    # scoped search still exact after restructuring
+    r = db.dsq(wiki.queries[0], "/", k=10)
+    assert (r.ids[0] >= 0).sum() == 10
+
+
+def test_multi_namespace_arxiv():
+    ds = make_arxiv_dir(scale=0.0005, dim=24, n_queries=4)
+    db = DirectoryVectorDB(dim=24)
+    db.ingest(ds.vectors, ds.entry_paths, namespaces=ds.extra_namespaces)
+    db.build_ann("flat")
+    all_subject = db.dsq(ds.queries[0], "/", k=5, namespace="fs")
+    all_time = db.dsq(ds.queries[0], "/", k=5, namespace="time")
+    assert all_subject.scope_size == all_time.scope_size == ds.n_entries
+    # a temporal scope differs from a subject scope
+    t_dirs = sorted(db.namespaces["time"].list_dirs())[:5]
+    deep = [d for d in t_dirs if d]
+    if deep:
+        r = db.dsq(ds.queries[0], deep[0], k=5, namespace="time")
+        assert r.scope_size < ds.n_entries
+
+
+def test_store_growth_and_incremental_ivf(wiki):
+    db = DirectoryVectorDB(dim=48)
+    half = wiki.n_entries // 2
+    db.ingest(wiki.vectors[:half], wiki.entry_paths[:half])
+    db.build_ann("ivf", n_lists=8)
+    db.ingest(wiki.vectors[half:], wiki.entry_paths[half:])
+    r = db.dsq(wiki.queries[0], "/", k=10, executor="ivf", nprobe=8)
+    assert (r.ids[0] >= 0).sum() == 10
+    total = sum(len(lst) for lst in db.executors["ivf"].lists)
+    assert total == wiki.n_entries
