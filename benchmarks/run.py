@@ -15,19 +15,21 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.01,
                     help="fraction of published dataset sizes")
     ap.add_argument("--only", default="",
-                    help="comma list: dsq,e2e,dsm,build,depth,openviking,"
-                         "roofline,kernels")
+                    help="comma list: dsq,dsq_batch,e2e,dsm,build,depth,"
+                         "openviking,roofline,kernels")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
-    from . import (bench_build, bench_depth, bench_dsm, bench_dsq_e2e,
-                   bench_dsq_latency, bench_kernels, bench_openviking,
-                   bench_roofline)
+    from . import (bench_build, bench_depth, bench_dsm, bench_dsq_batch,
+                   bench_dsq_e2e, bench_dsq_latency, bench_kernels,
+                   bench_openviking, bench_roofline)
     from .common import emit
 
     sections = [
         ("dsq", "Table IV: directory-only latency",
          lambda: bench_dsq_latency.run(args.scale)),
+        ("dsq_batch", "Batched multi-scope DSQ vs per-request loop",
+         lambda: bench_dsq_batch.run(args.scale)),
         ("e2e", "Fig 7/8: DSQ quality vs latency",
          lambda: bench_dsq_e2e.run(args.scale)),
         ("dsm", "Fig 9: DSM MOVE/MERGE latency",

@@ -77,7 +77,8 @@ def parse_collectives(hlo_text: str) -> Dict[str, float]:
 
 
 def cost_summary(compiled) -> Dict[str, float]:
-    cost = compiled.cost_analysis() or {}
+    from ..compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     out = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -1,0 +1,80 @@
+"""Portability shims for jax APIs that moved between releases.
+
+The codebase targets the current jax (``jax.shard_map``, ``AxisType`` mesh
+axis types, ``check_vma``); older jaxlib containers only ship
+``jax.experimental.shard_map`` with ``check_rep``/``auto``. Everything that
+builds meshes or shard_maps goes through these wrappers so both work.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
+              axis_names: Optional[frozenset] = None):
+    """``jax.shard_map`` when available, else the experimental fallback.
+    ``axis_names`` selects the manual axes (new API); the fallback expresses
+    the same thing through its complement, the ``auto`` set."""
+    if _NEW_SHARD_MAP is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return _NEW_SHARD_MAP(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def manual_axis_names() -> set:
+    """Mesh axes that sharding constraints must not mention in the current
+    trace context. New jax exposes them as Manual axis types on the abstract
+    mesh; on older releases every axis bound in the axis env (i.e. inside a
+    shard_map body) is reported — over-approximate but safe, a dropped spec
+    entry only loses a layout hint."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return {n for n, t in zip(am.axis_names, am.axis_types)
+                if "Manual" in str(t)}
+    except AttributeError:
+        pass
+    try:
+        from jax._src import core as _core
+        return set(_core.get_axis_env().axis_sizes)
+    except Exception:  # pragma: no cover
+        return set()
+
+
+def axis_size(axis_name) -> "jax.Array":
+    """``jax.lax.axis_size`` (new) or the classic psum-of-ones identity."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on current jax and a
+    one-element list of dicts on older releases; normalize to the dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              auto_axes: bool = True):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names)
+                             if auto_axes else None)
+    return jax.make_mesh(axis_shapes, axis_names)

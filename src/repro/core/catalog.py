@@ -44,6 +44,11 @@ class Catalog:
     def bind(self, entry_id: int, ref: object) -> None:
         self._map[entry_id] = ref
 
+    def bind_many(self, entry_ids, ref: object) -> None:
+        """Bind a batch of entries to one shared directory reference (the bulk
+        ingestion path; one dict update, no per-entry Python call)."""
+        self._map.update((int(e), ref) for e in entry_ids)
+
     def unbind(self, entry_id: int) -> None:
         del self._map[entry_id]
 

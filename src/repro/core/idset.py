@@ -305,6 +305,16 @@ class RoaringBitmap:
         mask = self.to_bool_mask(((n + 31) // 32) * 32)
         return np.packbits(mask, bitorder="little").view(np.uint32)
 
+    @staticmethod
+    def pack_words(bitmaps: Iterable["RoaringBitmap"], n: int) -> np.ndarray:
+        """Stack several scopes into one packed-mask matrix
+        (n_scopes, ceil(n/32)) uint32 — the multi-scope kernel's indirection
+        target and the distributed search's per-shard hand-off format."""
+        rows = [bm.to_words(n) for bm in bitmaps]
+        if not rows:
+            return np.zeros((0, (n + 31) // 32), dtype=np.uint32)
+        return np.stack(rows)
+
     # --------------------------------------------------------------- misc
     def memory_bytes(self) -> int:
         """Approximate resident bytes (containers + keys)."""

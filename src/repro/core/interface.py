@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import abc
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 from . import paths as P
 from .catalog import Catalog
@@ -23,7 +23,37 @@ class ResolveStats:
     posting_fetches: int = 0       # posting-list / aggregate-set reads
     set_ops: int = 0               # unions/differences performed
     node_visits: int = 0           # trie node visits (TrieHI) / key probes
+    batch_size: int = 0            # requests in the resolve_batch call
+    unique_scopes: int = 0         # distinct scope resolutions performed
+    dedup_hits: int = 0            # requests served by an earlier resolution
     stage_ns: Dict[str, int] = field(default_factory=dict)
+
+
+# A batch item's scope: (parsed anchor, recursive, parsed exclude branches).
+ScopeSpec = Tuple[P.Path, bool, Tuple[P.Path, ...]]
+
+
+def normalize_batch(paths: Sequence[P.Path | str],
+                    recursive: Union[bool, Sequence[bool]] = True,
+                    exclude: Optional[Sequence[Sequence[P.Path | str]]] = None
+                    ) -> List[ScopeSpec]:
+    """Canonicalize per-request scope specs so identical scopes across a batch
+    compare (and dedup) by value."""
+    n = len(paths)
+    if isinstance(recursive, (bool, int)) or (
+            hasattr(recursive, "ndim") and recursive.ndim == 0):
+        rec = [bool(recursive)] * n
+    else:
+        rec = [bool(r) for r in recursive]
+        if len(rec) != n:
+            raise ValueError(f"{len(rec)} recursive flags for {n} paths")
+    if exclude is None:
+        exc: List[Tuple[P.Path, ...]] = [()] * n
+    else:
+        if len(exclude) != n:
+            raise ValueError(f"{len(exclude)} exclude lists for {n} paths")
+        exc = [tuple(sorted(P.parse(e) for e in (ex or ()))) for ex in exclude]
+    return [(P.parse(p), r, e) for p, r, e in zip(paths, rec, exc)]
 
 
 class ScopeIndex(abc.ABC):
@@ -33,6 +63,24 @@ class ScopeIndex(abc.ABC):
 
     def __init__(self):
         self.catalog = Catalog()
+        # Scope-epoch counter: bumped by every scope-content mutation
+        # (insert/delete/move/merge). The coarse fallback for strategies
+        # without per-node state; TrieHI refines this to per-node epochs.
+        self._epoch = 0
+
+    def _bump_epoch(self) -> None:
+        self._epoch += 1
+
+    # ------------------------------------------------------------ mask cache
+    def scope_token(self, path: P.Path | str,
+                    recursive: bool = True) -> Optional[Hashable]:
+        """Opaque validity token for caching a resolution of
+        ``(path, recursive)``: a cached candidate set (or packed device mask
+        derived from it) stays valid exactly while the token compares equal.
+        ``None`` means "do not cache". The default is the global scope epoch —
+        any mutation invalidates everything; TrieHI overrides with per-node
+        epochs so unrelated subtrees keep their cached masks across DSM."""
+        return ("epoch", self._epoch)
 
     # ------------------------------------------------------------ write path
     @abc.abstractmethod
@@ -58,6 +106,39 @@ class ScopeIndex(abc.ABC):
     def resolve(self, path: P.Path | str, recursive: bool = True,
                 stats: Optional[ResolveStats] = None) -> RoaringBitmap:
         """DSQ scope resolution -> candidate entry-ID set."""
+
+    def resolve_batch(self, paths: Sequence[P.Path | str],
+                      recursive: Union[bool, Sequence[bool]] = True,
+                      exclude: Optional[Sequence[Sequence[P.Path | str]]] = None,
+                      stats: Optional[ResolveStats] = None
+                      ) -> List[RoaringBitmap]:
+        """Batched DSQ scope resolution with deduplication: identical
+        ``(path, recursive, exclude)`` scopes across the batch are resolved
+        once and the result object is shared. Returns one candidate set per
+        request, aligned with ``paths``. ``recursive`` may be a scalar or
+        per-request; ``exclude`` is an optional per-request list of excluded
+        branches. Fallback implementation; TrieHI additionally dedups the
+        anchor/exclusion sub-scopes across requests."""
+        specs = normalize_batch(paths, recursive, exclude)
+        resolved: Dict[ScopeSpec, RoaringBitmap] = {}
+        out: List[RoaringBitmap] = []
+        for spec in specs:
+            hit = resolved.get(spec)
+            if hit is None:
+                path_t, rec, exc = spec
+                if exc:
+                    hit = self.resolve_exclusion(path_t, list(exc),
+                                                 recursive=rec, stats=stats)
+                else:
+                    hit = self.resolve(path_t, recursive=rec, stats=stats)
+                resolved[spec] = hit
+            elif stats is not None:
+                stats.dedup_hits += 1
+            out.append(hit)
+        if stats is not None:
+            stats.batch_size += len(specs)
+            stats.unique_scopes += len(resolved)
+        return out
 
     # ------------------------------------------------------------------ DSM
     @abc.abstractmethod

@@ -62,6 +62,7 @@ class PEOfflineIndex(ScopeIndex):
         for pref in P.ancestors(path, include_self=True):
             self._posting(pref).add(entry_id)
         self.catalog.bind(entry_id, self._ref(path))
+        self._bump_epoch()
 
     def bulk_insert(self, entry_ids, dir_paths) -> None:
         import numpy as np
@@ -74,7 +75,8 @@ class PEOfflineIndex(ScopeIndex):
             for pref in P.ancestors(path, include_self=True):
                 self._posting(pref).add_many(arr)
             ref = self._ref(path)
-            self.catalog._map.update((int(e), ref) for e in ids)
+            self.catalog.bind_many(ids, ref)
+        self._bump_epoch()
 
     def delete(self, entry_id: int) -> None:
         ref = self.catalog.get(entry_id)
@@ -85,6 +87,7 @@ class PEOfflineIndex(ScopeIndex):
             if posting is not None:
                 posting.remove(entry_id)
         self.catalog.unbind(entry_id)
+        self._bump_epoch()
 
     # ----------------------------------------------------------------- read
     def resolve(self, path: P.Path | str, recursive: bool = True,
@@ -158,6 +161,7 @@ class PEOfflineIndex(ScopeIndex):
             posting = self._posting(anc)
             posting |= agg
         # root of the common chain requires no change (contains S before+after)
+        self._bump_epoch()
 
     def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
         src = P.parse(src)
@@ -196,6 +200,7 @@ class PEOfflineIndex(ScopeIndex):
         for anc in new_only:
             posting = self._posting(anc)
             posting |= agg
+        self._bump_epoch()
 
     # ------------------------------------------------------------ inspection
     def has_dir(self, path: P.Path | str) -> bool:

@@ -47,6 +47,7 @@ class PEOnlineIndex(ScopeIndex):
             posting = self.postings[path] = RoaringBitmap()
         posting.add(entry_id)
         self.catalog.bind(entry_id, self._ref(path))
+        self._bump_epoch()
 
     def bulk_insert(self, entry_ids, dir_paths) -> None:
         import numpy as np
@@ -60,7 +61,8 @@ class PEOnlineIndex(ScopeIndex):
                 posting = self.postings[path] = RoaringBitmap()
             posting.add_many(np.asarray(ids, np.uint32))
             ref = self._ref(path)
-            self.catalog._map.update((int(e), ref) for e in ids)
+            self.catalog.bind_many(ids, ref)
+        self._bump_epoch()
 
     def delete(self, entry_id: int) -> None:
         ref = self.catalog.get(entry_id)
@@ -70,6 +72,7 @@ class PEOnlineIndex(ScopeIndex):
         if posting is not None:
             posting.remove(entry_id)
         self.catalog.unbind(entry_id)
+        self._bump_epoch()
 
     # ----------------------------------------------------------------- read
     def resolve(self, path: P.Path | str, recursive: bool = True,
@@ -129,6 +132,7 @@ class PEOnlineIndex(ScopeIndex):
             for ref in self.refs.pop(old, []):
                 ref.path = new          # shared refs: all bound entries follow
                 self.refs.setdefault(new, []).append(ref)
+        self._bump_epoch()
 
     def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
         src = P.parse(src)
@@ -159,6 +163,7 @@ class PEOnlineIndex(ScopeIndex):
                 self.refs.setdefault(new, []).append(ref)
         # aux re-key (union children maps on conflicts)
         self.aux.rekey_subtree(src, dst)
+        self._bump_epoch()
 
     # ------------------------------------------------------------ inspection
     def has_dir(self, path: P.Path | str) -> bool:

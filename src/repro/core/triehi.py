@@ -25,7 +25,8 @@ from .interface import ResolveStats, ScopeIndex
 
 
 class TrieNode:
-    __slots__ = ("segment", "parent", "children", "inclusive", "local", "forward")
+    __slots__ = ("segment", "parent", "children", "inclusive", "local",
+                 "forward", "epoch")
 
     def __init__(self, segment: str, parent: Optional["TrieNode"]):
         self.segment = segment
@@ -34,6 +35,7 @@ class TrieNode:
         self.inclusive = RoaringBitmap()   # Inc(v): entries at-or-below v
         self.local = RoaringBitmap()       # Local(v): entries directly at v
         self.forward: Optional[TrieNode] = None  # set when dissolved by MERGE
+        self.epoch = 0                     # scope epoch: bumped when Inc/Local change
 
     def path(self) -> P.Path:
         segs: List[str] = []
@@ -109,8 +111,10 @@ class TrieHIIndex(ScopeIndex):
         cur: Optional[TrieNode] = node
         while cur is not None:
             cur.inclusive.add(entry_id)
+            cur.epoch += 1
             cur = cur.parent
         self.catalog.bind(entry_id, node)
+        self._bump_epoch()
 
     def bulk_insert(self, entry_ids, dir_paths) -> None:
         import numpy as np
@@ -124,8 +128,10 @@ class TrieHIIndex(ScopeIndex):
             cur = node
             while cur is not None:
                 cur.inclusive.add_many(arr)
+                cur.epoch += 1
                 cur = cur.parent
-            self.catalog._map.update((int(e), node) for e in ids)
+            self.catalog.bind_many(ids, node)
+        self._bump_epoch()
 
     def delete(self, entry_id: int) -> None:
         ref = self.catalog.get(entry_id)
@@ -136,8 +142,10 @@ class TrieHIIndex(ScopeIndex):
         cur: Optional[TrieNode] = node
         while cur is not None:
             cur.inclusive.remove(entry_id)
+            cur.epoch += 1
             cur = cur.parent
         self.catalog.unbind(entry_id)
+        self._bump_epoch()
 
     # ----------------------------------------------------------------- read
     def resolve(self, path: P.Path | str, recursive: bool = True,
@@ -169,6 +177,58 @@ class TrieHIIndex(ScopeIndex):
             stats.set_ops += len(node.children) + 1
             stats.stage_ns["bitmap_compute"] = (
                 stats.stage_ns.get("bitmap_compute", 0) + t2 - t1)
+        return out
+
+    def scope_token(self, path: P.Path | str, recursive: bool = True):
+        """Per-node scope epoch: the token is (node identity, node epoch).
+        Mutations bump exactly the nodes whose Inc/Local changed, so cached
+        packed masks for unrelated subtrees survive DSM elsewhere. A MOVE or
+        MERGE that relocates the anchor changes what the path walk returns
+        (different node, or none), which also invalidates. Missing
+        directories are uncacheable (``None``): an insert could create them."""
+        node = self._walk(P.parse(path), create=False)
+        if node is None:
+            return None
+        return (node, node.epoch)
+
+    def resolve_batch(self, paths, recursive=True, exclude=None,
+                      stats: Optional[ResolveStats] = None):
+        """Batched resolve with *sub-scope* deduplication: the anchors and
+        every exclusion branch across the whole batch form one pool of
+        (path, recursive) sub-scopes, each resolved against the trie once;
+        exclusion requests are composed from the shared pieces."""
+        from .interface import normalize_batch
+        specs = normalize_batch(paths, recursive, exclude)
+        sub: Dict[Tuple[P.Path, bool], RoaringBitmap] = {}
+
+        def sub_resolve(path: P.Path, rec: bool) -> RoaringBitmap:
+            key = (path, rec)
+            hit = sub.get(key)
+            if hit is None:
+                hit = sub[key] = self.resolve(path, recursive=rec, stats=stats)
+            elif stats is not None:
+                stats.dedup_hits += 1
+            return hit
+
+        composed: Dict[Tuple, RoaringBitmap] = {}
+        out = []
+        for path, rec, exc in specs:
+            if not exc:
+                out.append(sub_resolve(path, rec))
+                continue
+            ckey = (path, rec, exc)
+            got = composed.get(ckey)
+            if got is None:
+                got = sub_resolve(path, rec).copy()
+                for branch in exc:
+                    got -= sub_resolve(branch, True)
+                composed[ckey] = got
+            out.append(got)
+        if stats is not None:
+            stats.batch_size += len(specs)
+            # distinct full specs, same definition as the base class (the
+            # finer sub-scope sharing shows up in dedup_hits instead)
+            stats.unique_scopes += len(set(specs))
         return out
 
     # ------------------------------------------------------------------ DSM
@@ -204,14 +264,17 @@ class TrieHIIndex(ScopeIndex):
         old_only, new_only = self._split_chains(old_chain, new_chain)
         for anc in old_only:
             anc.inclusive -= agg
+            anc.epoch += 1
         for anc in new_only:
             anc.inclusive |= agg
+            anc.epoch += 1
         # relink: one child-map delete, one insert, one parent pointer update.
         # Independent of the number of descendant directories.
         assert s.parent is not None
         del s.parent.children[s.segment]
         dest.children[s.segment] = s
         s.parent = dest
+        self._bump_epoch()
 
     def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
         src_p, dst_p = P.parse(src), P.parse(dst)
@@ -232,12 +295,15 @@ class TrieHIIndex(ScopeIndex):
         old_only, new_only = self._split_chains(old_chain, new_chain)
         for anc in old_only:
             anc.inclusive -= agg
+            anc.epoch += 1
         for anc in new_only:
             anc.inclusive |= agg
+            anc.epoch += 1
         # detach s, then reconcile topology below s and d
         assert s.parent is not None
         del s.parent.children[s.segment]
         self._reconcile(s, d)
+        self._bump_epoch()
 
     def _reconcile(self, a: TrieNode, b: TrieNode) -> None:
         """Dissolve node ``a`` into node ``b``. Aggregates above b already
@@ -245,6 +311,7 @@ class TrieHIIndex(ScopeIndex):
         node-level: non-conflicting children relink as whole units (r counts
         only the conflicting nodes visited)."""
         b.local |= a.local
+        b.epoch += 1
         for name, ca in list(a.children.items()):
             cb = b.children.get(name)
             if cb is None:

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import compat
+
 
 def make_scoped_search(mesh: Mesh, n_total: int, dim: int, k: int,
                        metric: str = "ip", dtype=None):
@@ -60,9 +62,64 @@ def make_scoped_search(mesh: Mesh, n_total: int, dim: int, k: int,
         fid = jnp.take_along_axis(ai, fi, axis=1)
         return fv, fid
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_search, mesh=mesh,
         in_specs=(P(axes, None), P(axes), P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_multi_scope_search(mesh: Mesh, n_total: int, dim: int, k: int,
+                            metric: str = "ip"):
+    """Batched heterogeneous-scope variant of :func:`make_scoped_search`.
+
+    The host hands the device mesh ONE packed scope-mask matrix per request
+    batch instead of one dense int8 mask per request:
+
+    db        : (n_total, dim)         sharded row-wise over all mesh axes
+    mask_words: (n_scopes, n_total/32) packed uint32, sharded on the word dim
+                (each shard holds exactly the words covering its rows —
+                32x less mask traffic than the dense int8 hand-off)
+    scope_ids : (q,) int32             replicated; row into mask_words
+    queries   : (q, dim)               replicated
+
+    One shard_map launch ranks the whole mixed-scope batch; the collective
+    stays the same O(devices*k) triple gather."""
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n_total % n_dev == 0, (n_total, n_dev)
+    n_loc = n_total // n_dev
+    assert n_loc % 32 == 0, (n_loc, "local rows must be word-aligned")
+
+    def local_search(db_l, words_l, sids, q):
+        if db_l.dtype == jnp.int8:
+            db_l = db_l.astype(jnp.bfloat16) * jnp.bfloat16(1.0 / 127)
+        scores = jnp.einsum("qd,nd->qn", q.astype(db_l.dtype), db_l,
+                            preferred_element_type=jnp.float32)
+        if metric == "l2":
+            scores = 2 * scores - jnp.sum(
+                db_l.astype(jnp.float32) ** 2, axis=-1)[None, :]
+        # unpack this shard's packed words in-register: (n_scopes, n_loc)
+        from ..kernels.ref import unpack_words_ref
+        masks = unpack_words_ref(words_l, n_loc)
+        valid = jnp.take(masks, sids, axis=0)                # (q, n_loc)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        v, i = jax.lax.top_k(scores, k)
+        shard = jax.lax.axis_index(axes)
+        gi = i.astype(jnp.int32) + shard * n_loc
+        av = jax.lax.all_gather(v, axes, tiled=False)
+        ai = jax.lax.all_gather(gi, axes, tiled=False)
+        av = av.transpose(1, 0, 2).reshape(-1, n_dev * k)
+        ai = ai.transpose(1, 0, 2).reshape(-1, n_dev * k)
+        fv, fi = jax.lax.top_k(av, k)
+        fid = jnp.take_along_axis(ai, fi, axis=1)
+        return fv, fid
+
+    fn = compat.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(axes, None), P(None, axes), P(None), P(None, None)),
         out_specs=(P(None, None), P(None, None)),
         check_vma=False,
     )

@@ -14,6 +14,7 @@ import numpy as np
 from . import ref
 from .bitmap_ops import mask_and_popcount as _mask_and_popcount
 from .flash_decode import flash_decode as _flash_decode
+from .scoped_topk import multi_scope_topk as _multi_scope_topk
 from .scoped_topk import scoped_topk as _scoped_topk
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
@@ -49,6 +50,34 @@ def scoped_topk(queries, rows, mask, k: int = 10, metric: str = "ip",
     return vals[:nq], ids[:nq]
 
 
+def multi_scope_topk(queries, rows, mask_words, scope_ids, k: int = 10,
+                     metric: str = "ip", block_q: int = 8, block_n: int = 1024,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch heterogeneous masked top-k: per-query scope-id
+    indirection into a packed (n_scopes, n/32) uint32 mask matrix. Pads q to
+    block_q, n (rows + mask words) to block_n, unpads results."""
+    interpret = _INTERPRET if interpret is None else interpret
+    queries = jnp.asarray(queries, dtype=jnp.float32)
+    rows = jnp.asarray(rows)
+    mask_words = jnp.asarray(mask_words, dtype=jnp.uint32)
+    scope_ids = jnp.asarray(scope_ids, dtype=jnp.int32)
+    block_n = min(block_n, max(128, rows.shape[0]))
+    block_n = ((block_n + 31) // 32) * 32
+    block_q = min(block_q, max(1, queries.shape[0]))
+    qp, nq = _pad_to(queries, 0, block_q)
+    rp, n = _pad_to(rows, 0, block_n)
+    # mask words must cover the padded row count; extra bits stay 0 (invalid)
+    want_words = rp.shape[0] // 32
+    wp = jnp.pad(mask_words,
+                 [(0, 0), (0, want_words - mask_words.shape[1])])
+    sp, _ = _pad_to(scope_ids, 0, block_q, value=0)
+    vals, ids = _multi_scope_topk(qp, rp, wp, sp, k=k, block_q=block_q,
+                                  block_n=block_n, metric=metric,
+                                  interpret=interpret)
+    return vals[:nq], ids[:nq]
+
+
 def mask_and_popcount(a, b, block: int = 2048,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
@@ -78,4 +107,5 @@ def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
     return _flash_decode(q, kp, vp, mp, block_s=block_s, interpret=interpret)
 
 
-__all__ = ["scoped_topk", "mask_and_popcount", "flash_decode", "ref"]
+__all__ = ["scoped_topk", "multi_scope_topk", "mask_and_popcount",
+           "flash_decode", "ref"]

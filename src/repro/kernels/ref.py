@@ -30,6 +30,34 @@ def scoped_topk_ref(queries: jax.Array, rows: jax.Array, mask: jax.Array,
     return vals, ids.astype(jnp.int32)
 
 
+def unpack_words_ref(words: jax.Array, n: int) -> jax.Array:
+    """(..., n/32) packed uint32 -> (..., n) bool (bit j of word w = row
+    w*32+j, little-endian like RoaringBitmap.to_words)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    return (bits.reshape(*words.shape[:-1], -1) != 0)[..., :n]
+
+
+def multi_scope_topk_ref(queries: jax.Array, rows: jax.Array,
+                         mask_words: jax.Array, scope_ids: jax.Array,
+                         k: int = 10, metric: str = "ip"
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Unfused heterogeneous-batch reference: expands every scope's packed
+    mask to a dense bool matrix, gathers per-query rows, full score matrix."""
+    queries = queries.astype(jnp.float32)
+    rows_f = rows.astype(jnp.float32)
+    n = rows_f.shape[0]
+    scores = queries @ rows_f.T
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.sum(rows_f * rows_f, axis=1)[None, :]
+    masks = unpack_words_ref(mask_words, n)           # (n_scopes, n)
+    valid = jnp.take(masks, scope_ids, axis=0)        # (q, n)
+    scores = jnp.where(valid, scores, NEG_INF)
+    vals, ids = jax.lax.top_k(scores, k)
+    ids = jnp.where(vals <= NEG_INF, -1, ids)
+    return vals, ids.astype(jnp.int32)
+
+
 def mask_and_popcount_ref(a: jax.Array, b: jax.Array
                           ) -> Tuple[jax.Array, jax.Array]:
     words = a & b

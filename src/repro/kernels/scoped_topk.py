@@ -84,6 +84,101 @@ def _kernel(q_ref, x_ref, mask_ref, vals_ref, ids_ref,
         ids_ref[...] = acc_i[...]
 
 
+def _multi_kernel(q_ref, x_ref, words_ref, sid_ref, vals_ref, ids_ref,
+                  acc_v, acc_i, *, k: int, block_n: int, metric: str):
+    """Heterogeneous-batch variant: every query row carries a scope id that
+    indirects into a packed (n_scopes, n_words) mask matrix, so one launch
+    ranks a whole mixed-scope request batch. The scope-mask tile for this
+    n-block is (n_scopes, block_n/32) uint32; bits are expanded in-register
+    (VPU shifts), never materialized as a bool mask in HBM."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...]                                            # (block_q, d)
+    x = x_ref[...]                                            # (block_n, d)
+    scores = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (block_q, block_n)
+    if metric == "l2":
+        sq = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32), axis=1)
+        scores = 2.0 * scores - sq[None, :]
+    words = words_ref[...]                                    # (n_scopes, bw)
+    sid = sid_ref[...]                                        # (block_q,)
+    qwords = jnp.take(words, sid, axis=0)                     # (block_q, bw)
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    qbits = jnp.take_along_axis(qwords, col >> 5, axis=1)     # word of each lane
+    mask = (qbits >> (col & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = mask != 0                                          # (block_q, block_n)
+    scores = jnp.where(mask, scores, NEG_INF)
+    base = ni * block_n
+    ids = base + col
+    ids = jnp.where(mask, ids, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "metric", "interpret"))
+def multi_scope_topk(queries: jax.Array, rows: jax.Array,
+                     mask_words: jax.Array, scope_ids: jax.Array,
+                     k: int = 10, block_q: int = 8, block_n: int = 1024,
+                     metric: str = "ip", interpret: bool = True
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch heterogeneous masked top-k.
+
+    queries (q, d) f32; rows (n, d); mask_words (n_scopes, n/32) packed uint32
+    (bit j of word w selects row w*32+j); scope_ids (q,) int32 row into
+    mask_words per query. Returns (values (q, k), ids (q, k); -1 = none).
+    q % block_q == 0, n % block_n == 0, block_n % 32 == 0 (ops.py pads).
+    """
+    nq, d = queries.shape
+    n = rows.shape[0]
+    n_scopes, n_words = mask_words.shape
+    assert nq % block_q == 0 and n % block_n == 0, (nq, n, block_q, block_n)
+    assert block_n % 32 == 0 and n_words * 32 == n, (block_n, n_words, n)
+    assert d % 128 == 0 or interpret, "lane-dim should be 128-aligned on TPU"
+    grid = (nq // block_q, n // block_n)
+    bw = block_n // 32
+    kernel = functools.partial(_multi_kernel, k=k, block_n=block_n,
+                               metric=metric)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((n_scopes, bw), lambda qi, ni: (0, ni)),
+            pl.BlockSpec((block_q,), lambda qi, ni: (qi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), rows, mask_words.astype(jnp.uint32),
+      scope_ids.astype(jnp.int32))
+    return vals, ids
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "block_q", "block_n", "metric", "interpret"))

@@ -50,7 +50,8 @@ def compile_cell(arch: str, shape_name: str, multi_pod: bool,
     metrics["flops_global"] = metrics["flops"] * chips
     metrics["bytes_global"] = metrics["bytes"] * chips
     print(compiled.memory_analysis())
-    cost = compiled.cost_analysis()
+    from ..compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
     del compiled, lowered
     return metrics

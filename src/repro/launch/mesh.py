@@ -12,16 +12,14 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; multi_pod adds a 2-pod DCN axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for_devices(n_devices: Optional[int] = None,
@@ -32,8 +30,7 @@ def make_mesh_for_devices(n_devices: Optional[int] = None,
     model = max(1, min(model_parallelism, n))
     while n % model != 0:
         model -= 1
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def mesh_device_count(mesh: Mesh) -> int:

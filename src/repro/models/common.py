@@ -236,12 +236,8 @@ def spec_tree(shape_tree, logical_tree, mesh: Mesh, rules=None):
 def _manual_axes() -> set:
     """Axes that are Manual in the current trace context (inside shard_map):
     sharding constraints must not mention them."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-        return {n for n, t in zip(am.axis_names, am.axis_types)
-                if "Manual" in str(t)}
-    except Exception:  # pragma: no cover
-        return set()
+    from ..compat import manual_axis_names
+    return manual_axis_names()
 
 
 def constrain(x, logical: Sequence[Optional[str]], mesh: Optional[Mesh],
@@ -251,6 +247,10 @@ def constrain(x, logical: Sequence[Optional[str]], mesh: Optional[Mesh],
         return x
     spec = logical_spec(logical, x.shape, mesh, rules)
     manual = _manual_axes()
+    if manual and not hasattr(jax.sharding, "AxisType"):
+        # legacy jax/XLA cannot re-constrain inside a partial-manual
+        # shard_map region (IsManualSubgroup check); drop the hint entirely
+        return x
     if manual:
         cleaned = []
         for entry in spec:

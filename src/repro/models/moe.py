@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import compat
 from .layers import Spec
 
 
@@ -141,7 +142,7 @@ def moe_apply(p: Dict[str, jax.Array], x: jax.Array, cfg,
                                   act=act)
             return jax.lax.psum(y, "model")
 
-        y = jax.shard_map(
+        y = compat.shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(data_axes, None), P(None, None),
                       P("model", None, None), P("model", None, None),

@@ -73,16 +73,31 @@ class ContextDatabase:
         else:
             raise ValueError(op)
 
+    def retrieve_batch(self, query_vecs: np.ndarray, scopes: Sequence[str],
+                       cfg: RAGConfig, recursive=True,
+                       exclude: Optional[Sequence[Sequence[str]]] = None
+                       ) -> List[Tuple[List[ContextEntry], Dict[str, float]]]:
+        """Batched scoped retrieval: N concurrent requests resolve repeated
+        scopes once and share ranking launches (``dsq_batch``), instead of
+        N independent resolve+launch round-trips."""
+        results = self.db.dsq_batch(np.atleast_2d(query_vecs), list(scopes),
+                                    k=cfg.k, recursive=recursive,
+                                    exclude=exclude, executor=cfg.executor)
+        out = []
+        for res in results:
+            hits = [self.payloads[int(i)] for i in res.ids[0] if int(i) >= 0]
+            stats = {"directory_us": res.directory_ns / 1e3,
+                     "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size,
+                     "plan": res.plan, "scope_shared": res.scope_shared}
+            out.append((hits, stats))
+        return out
+
     def retrieve(self, query_vec: np.ndarray, scope: str, cfg: RAGConfig,
                  recursive: bool = True, exclude: Sequence[str] = ()
                  ) -> Tuple[List[ContextEntry], Dict[str, float]]:
-        res = self.db.dsq(query_vec[None, :], scope, k=cfg.k,
-                          recursive=recursive, exclude=exclude,
-                          executor=cfg.executor)
-        hits = [self.payloads[int(i)] for i in res.ids[0] if int(i) >= 0]
-        stats = {"directory_us": res.directory_ns / 1e3,
-                 "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size}
-        return hits, stats
+        exc = [list(exclude)] if exclude else None
+        return self.retrieve_batch(query_vec[None, :], [scope], cfg,
+                                   recursive=recursive, exclude=exc)[0]
 
     def assemble(self, hits: List[ContextEntry], cfg: RAGConfig
                  ) -> np.ndarray:
@@ -121,12 +136,19 @@ class RAGServer:
     def answer(self, query_vecs: np.ndarray, scopes: Sequence[str],
                prompts: Sequence[np.ndarray], max_new_tokens: int = 16,
                recursive: bool = True) -> Dict[str, object]:
+        B = len(scopes)
+        if len(prompts) not in (0, 1, B):
+            raise ValueError(f"{len(prompts)} prompts for {B} requests "
+                             "(want 0, 1 to broadcast, or one per request)")
         t0 = time.perf_counter()
-        contexts, retrieval_stats = [], []
-        for qv, scope in zip(query_vecs, scopes):
-            hits, stats = self.ctx.retrieve(qv, scope, self.cfg,
+        # one batched multi-scope DSQ for the whole request batch: repeated
+        # scopes resolve once, scan-plan requests share a single launch
+        retrieved = self.ctx.retrieve_batch(query_vecs, scopes, self.cfg,
                                             recursive=recursive)
-            contexts.append(self.assemble_with_prompt(hits, prompts))
+        contexts, retrieval_stats = [], []
+        for i, (hits, stats) in enumerate(retrieved):
+            prompt = self._prompt_for(prompts, i)
+            contexts.append(self.assemble_with_prompt(hits, prompt))
             retrieval_stats.append(stats)
         t1 = time.perf_counter()
         # pad to a rectangle for the batched LM
@@ -153,7 +175,16 @@ class RAGServer:
             "decode_s": t2 - t1,
         }
 
-    def assemble_with_prompt(self, hits, prompts) -> np.ndarray:
+    @staticmethod
+    def _prompt_for(prompts: Sequence[np.ndarray], i: int) -> np.ndarray:
+        """Request i's prompt: per-request when one prompt per request was
+        given, broadcast when a single prompt was given, empty otherwise."""
+        if len(prompts) == 0:
+            return np.zeros(0, np.int32)
+        if len(prompts) == 1:
+            return np.asarray(prompts[0], np.int32)
+        return np.asarray(prompts[i], np.int32)
+
+    def assemble_with_prompt(self, hits, prompt: np.ndarray) -> np.ndarray:
         ctx = self.ctx.assemble(hits, self.cfg)
-        prompt = prompts[0] if len(prompts) else np.zeros(0, np.int32)
         return np.concatenate([ctx, np.asarray(prompt, np.int32)])

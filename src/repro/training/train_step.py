@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import compat
 from ..models import loss_fn
 from ..models.common import ArchConfig
 from .optimizer import OptConfig, adamw_update
@@ -32,7 +33,7 @@ def int8_psum(tree, axis: str):
         q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
         summed = jax.lax.psum(q.astype(jnp.int32), axis)
         return (summed.astype(jnp.float32) * scale
-                / jax.lax.axis_size(axis)).astype(g.dtype)
+                / compat.axis_size(axis)).astype(g.dtype)
     return jax.tree.map(one, tree)
 
 
@@ -88,11 +89,20 @@ def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
             metrics["loss"] = loss
             return params, opt_state, metrics
 
-        return jax.shard_map(
+        # pod manual, data/model auto-sharded inside. Legacy XLA cannot
+        # compile partial-manual regions (IsManualSubgroup check), so there
+        # we go fully manual: the in_specs only partition over "pod", the
+        # body is simply replicated across data/model — same numerics,
+        # no intra-pod parallelism.
+        if hasattr(jax.sharding, "AxisType"):
+            manual = frozenset({"pod"})
+        else:
+            manual = frozenset(mesh.axis_names)
+        return compat.shard_map(
             inner, mesh=mesh,
             in_specs=(P(), P(), P("pod")),
             out_specs=(P(), P(), P()),
-            axis_names={"pod"}, check_vma=False,
+            axis_names=manual, check_vma=False,
         )(params, opt_state, batch)
 
     return pod_step

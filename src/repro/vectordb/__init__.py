@@ -2,7 +2,10 @@ from .database import DSQResult, DirectoryVectorDB
 from .flat import FlatExecutor
 from .graph import PGIndex
 from .ivf import IVFIndex
+from .planner import (BatchAccounting, BatchPlanner, PlanGroup, ScopeKey,
+                      ScopeMaskCache, device_popcount)
 from .store import VectorStore
 
 __all__ = ["DirectoryVectorDB", "DSQResult", "FlatExecutor", "PGIndex",
-           "IVFIndex", "VectorStore"]
+           "IVFIndex", "VectorStore", "BatchAccounting", "BatchPlanner",
+           "PlanGroup", "ScopeKey", "ScopeMaskCache", "device_popcount"]

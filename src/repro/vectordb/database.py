@@ -16,9 +16,11 @@ import numpy as np
 
 from ..core import (DSM, DSMExecutor, DSMJournal, ResolveStats, ScopeIndex,
                     make_scope_index)
+from ..core.interface import normalize_batch
 from .flat import FlatExecutor
 from .graph import PGIndex
 from .ivf import IVFIndex
+from .planner import BatchAccounting, BatchPlanner, ScopeMaskCache
 from .store import VectorStore
 
 DEFAULT_NS = "fs"
@@ -32,6 +34,9 @@ class DSQResult:
     directory_ns: int                # directory-only latency (candidate set gen)
     ann_ns: int                      # executor latency
     resolve_stats: ResolveStats = field(default_factory=ResolveStats)
+    plan: str = ""                   # "gather" | "scan" | "empty" (batch path)
+    scope_shared: int = 1            # requests sharing this scope in the batch
+    batch: Optional[BatchAccounting] = None   # shared-resolution accounting
 
     @property
     def total_ns(self) -> int:
@@ -47,6 +52,7 @@ class DirectoryVectorDB:
         self.namespaces: Dict[str, ScopeIndex] = {}
         self.executors: Dict[str, object] = {}
         self._dsm: Dict[str, DSMExecutor] = {}
+        self._planners: Dict[str, BatchPlanner] = {}
         self._journal_path = journal_path
         self.namespace(DEFAULT_NS)  # default filesystem namespace
 
@@ -123,6 +129,136 @@ class DirectoryVectorDB:
         return DSQResult(ids=ids, scores=scores, scope_size=len(candidate_ids),
                          directory_ns=t1 - t0, ann_ns=t2 - t1,
                          resolve_stats=stats)
+
+    def planner(self, namespace: str = DEFAULT_NS) -> BatchPlanner:
+        """Per-namespace batch planner (owns the epoch-validated mask cache)."""
+        if namespace not in self._planners:
+            self._planners[namespace] = BatchPlanner(cache=ScopeMaskCache())
+        return self._planners[namespace]
+
+    def dsq_batch(self, queries: np.ndarray, paths: Sequence[str],
+                  k: int = 10, recursive=True,
+                  exclude: Optional[Sequence[Sequence[str]]] = None,
+                  namespace: str = DEFAULT_NS, executor: str = "flat",
+                  use_pallas: bool = False,
+                  **executor_params) -> List[DSQResult]:
+        """Batched multi-scope DSQ: one request per row of ``queries`` with
+        its own anchor (and optionally its own ``recursive`` flag and
+        ``exclude`` list). Repeated scopes across the batch resolve once;
+        scan-plan scopes share a single multi-scope ranking launch; each
+        gather-plan scope is one launch over its candidate rows. Results are
+        bit-identical to calling :meth:`dsq` per request (with
+        ``use_pallas=True`` the shared scan launch uses the fused TPU kernel
+        instead — same top-k members, low-bit/tie order may differ), but the
+        directory and kernel work is amortized (see ``DSQResult.batch``)."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        B = queries.shape[0]
+        if len(paths) != B:
+            raise ValueError(f"{len(paths)} paths for {B} query rows")
+        idx = self.namespaces[namespace]
+        ex = self.executors.get(executor)
+        if ex is None:
+            raise ValueError(f"executor {executor!r} not built "
+                             f"(have {sorted(self.executors)})")
+        if not isinstance(ex, FlatExecutor) or executor_params:
+            # non-flat executors have no shared-mask plan, and explicit
+            # executor params (e.g. plan="scan") must reach the executor
+            # exactly as the per-request path would pass them — dedup the
+            # resolution only, loop the executor
+            return self._dsq_batch_fallback(queries, paths, k, recursive,
+                                            exclude, namespace, executor,
+                                            **executor_params)
+        acct = BatchAccounting()
+        t0 = time.perf_counter_ns()
+        specs = normalize_batch(paths, recursive, exclude)
+        groups = self.planner(namespace).plan(
+            idx, len(self.store), specs, k, acct)
+        t1 = time.perf_counter_ns()
+        acct.directory_ns = t1 - t0
+
+        out_scores = np.full((B, k), -np.inf, np.float32)
+        out_ids = np.full((B, k), -1, np.int64)
+        plan_of = {}
+        for g in groups:
+            for i in g.request_idx:
+                plan_of[i] = g
+        # one launch per gather group
+        for g in groups:
+            if g.plan != "gather":
+                continue
+            rows = np.asarray(g.request_idx)
+            s, i = ex.search(queries[rows], k, candidate_ids=g.candidate_ids,
+                             plan="gather")
+            out_scores[rows] = s
+            out_ids[rows] = i
+            acct.launches += 1
+        # ONE launch for every scan-plan request in the batch
+        scan_groups = [g for g in groups if g.plan == "scan"]
+        if scan_groups:
+            words = np.stack([g.words for g in scan_groups])
+            rows, sids = [], []
+            for si, g in enumerate(scan_groups):
+                rows.extend(g.request_idx)
+                sids.extend([si] * len(g.request_idx))
+            rows = np.asarray(rows)
+            s, i = ex.search_multi(queries[rows], words,
+                                   np.asarray(sids, np.int32), k,
+                                   use_pallas=use_pallas)
+            out_scores[rows] = s
+            out_ids[rows] = i
+            acct.launches += 1
+        t2 = time.perf_counter_ns()
+        acct.ann_ns = t2 - t1
+
+        dir_share = acct.directory_ns // max(B, 1)
+        ann_share = acct.ann_ns // max(B, 1)
+        results = []
+        for i in range(B):
+            g = plan_of[i]
+            results.append(DSQResult(
+                ids=out_ids[i:i + 1], scores=out_scores[i:i + 1],
+                scope_size=g.scope_size, directory_ns=dir_share,
+                ann_ns=ann_share, resolve_stats=acct.resolve_stats,
+                plan=g.plan, scope_shared=len(g.request_idx), batch=acct))
+        return results
+
+    def _dsq_batch_fallback(self, queries, paths, k, recursive, exclude,
+                            namespace, executor, **executor_params
+                            ) -> List[DSQResult]:
+        """Shared resolution, per-request executor calls: repeated scopes
+        still resolve once (``resolve_batch`` + shared ``to_array``), then
+        the executor runs per request with its params forwarded verbatim —
+        exactly what :meth:`dsq` would pass it."""
+        idx = self.namespaces[namespace]
+        ex = self.executors[executor]
+        acct = BatchAccounting()
+        t0 = time.perf_counter_ns()
+        specs = normalize_batch(paths, recursive, exclude)
+        scopes = idx.resolve_batch(paths, recursive, exclude,
+                                   stats=acct.resolve_stats)
+        cand: Dict[int, np.ndarray] = {}      # id(bitmap) -> shared id array
+        t1 = time.perf_counter_ns()
+        out = []
+        for i, scope in enumerate(scopes):
+            ids_arr = cand.get(id(scope))
+            if ids_arr is None:
+                ids_arr = cand[id(scope)] = scope.to_array()
+            scores, ids = ex.search(queries[i], k, candidate_ids=ids_arr,
+                                    **executor_params)
+            out.append(DSQResult(
+                ids=ids, scores=scores, scope_size=len(ids_arr),
+                directory_ns=(t1 - t0) // max(len(specs), 1), ann_ns=0,
+                resolve_stats=acct.resolve_stats, batch=acct))
+        t2 = time.perf_counter_ns()
+        acct.batch_size = len(specs)
+        acct.unique_scopes = len(cand)
+        acct.directory_ns = t1 - t0
+        acct.ann_ns = t2 - t1
+        acct.launches = len(specs)
+        ann_share = acct.ann_ns // max(len(specs), 1)
+        for r in out:
+            r.ann_ns = ann_share
+        return out
 
     # ------------------------------------------------------------------ DSM
     def move(self, src: str, new_parent: str,

@@ -36,12 +36,38 @@ def _scan_topk(queries: jnp.ndarray, rows: jnp.ndarray, mask: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _multi_scan_topk(queries: jnp.ndarray, rows: jnp.ndarray,
+                     mask_words: jnp.ndarray, scope_ids: jnp.ndarray,
+                     k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Heterogeneous-batch scan: one launch ranks every scan-plan request in
+    the batch. Each query row indirects through ``scope_ids`` into a packed
+    (n_scopes, ceil(n/32)) uint32 mask matrix, unpacked in-register on
+    device (the jnp twin of the Pallas ``multi_scope_topk`` kernel)."""
+    from ..kernels.ref import unpack_words_ref
+    n = rows.shape[0]
+    if metric in ("ip", "cos"):
+        scores = queries @ rows.T
+    else:
+        scores = 2.0 * (queries @ rows.T) - jnp.sum(rows * rows, axis=-1)[None, :]
+    masks = unpack_words_ref(mask_words, n)                 # (n_scopes, n)
+    valid = jnp.take(masks, scope_ids, axis=0)              # (B, n)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
 def _gather_topk(queries: jnp.ndarray, cand_rows: jnp.ndarray,
                  k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    if metric in ("ip", "cos"):
-        scores = queries @ cand_rows.T
+    if cand_rows.shape[0] == 1:
+        # XLA lowers the (B, d) @ (d, 1) case to a gemv whose accumulation
+        # order depends on B; the elementwise-sum form is batch-invariant,
+        # which dsq_batch needs to stay bit-identical to per-request dsq.
+        scores = jnp.sum(queries * cand_rows[0][None, :], axis=-1,
+                         keepdims=True)
     else:
-        scores = 2.0 * (queries @ cand_rows.T) - jnp.sum(
+        scores = queries @ cand_rows.T
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.sum(
             cand_rows * cand_rows, axis=-1)[None, :]
     return jax.lax.top_k(scores, k)
 
@@ -89,3 +115,32 @@ class FlatExecutor:
             scores = np.concatenate([scores, pad_s], axis=1)
             ids = np.concatenate([np.asarray(ids, np.int64), pad_i], axis=1)
         return scores, np.asarray(ids, dtype=np.int64)
+
+    def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
+                     scope_ids: np.ndarray, k: int,
+                     use_pallas: bool = False
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """One launch for a heterogeneous scan-plan batch: queries (B, d),
+        packed masks (n_scopes, ceil(n/32)), per-query scope row ids (B,).
+        Returns (scores, ids) both (B, k), ids int64, -1 where the scope had
+        no candidate. The default jnp twin of the Pallas ``multi_scope_topk``
+        keeps results bit-identical to the per-request scan path on every
+        backend; pass ``use_pallas=True`` on real TPUs for the fused kernel
+        (same top-k set, but tie order/low score bits may differ from the
+        unfused jax.lax.top_k)."""
+        from ..kernels import ops as kops
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        if use_pallas:
+            scores, ids = kops.multi_scope_topk(
+                queries, self.store.device_vectors(), mask_words,
+                scope_ids, k=k, metric=self.store.metric)
+        else:
+            scores, ids = _multi_scan_topk(
+                jnp.asarray(queries), self.store.device_vectors(),
+                jnp.asarray(mask_words, dtype=jnp.uint32),
+                jnp.asarray(scope_ids, dtype=jnp.int32), k,
+                self.store.metric)
+        scores = np.asarray(scores)
+        ids = np.asarray(ids, dtype=np.int64)
+        ids[~np.isfinite(scores)] = -1
+        return scores, ids

@@ -1,0 +1,228 @@
+"""Batch DSQ query planner: scope dedup, epoch-validated packed-mask cache,
+gather-vs-scan plan selection.
+
+A request batch arrives as N ``(query, scope)`` pairs. The planner
+
+  1. canonicalizes scopes and groups identical ones (repeated scopes across
+     concurrent users are the common case in serving),
+  2. serves each unique scope from the :class:`ScopeMaskCache` when its
+     scope-epoch tokens still validate (TrieHI: per-node epochs, so DSM in an
+     unrelated subtree does not evict), resolving only the misses in one
+     ``resolve_batch`` call,
+  3. picks the execution plan per unique scope by selectivity — ``gather``
+     (score only the |C| candidate rows) below :data:`flat.GATHER_THRESHOLD`,
+     ``scan`` (mask-to--inf full sweep, the Pallas ``multi_scope_topk`` shape)
+     above it — exactly the pre- vs post-filter decision the VDBMS surveys
+     identify as the operator-level problem for attribute-filtered search.
+
+Every scan-plan scope in the batch shares ONE ranking launch (scope-id
+indirection into a packed (n_scopes, n_words) mask matrix); each gather-plan
+scope is one launch over its candidate rows.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import ResolveStats, RoaringBitmap, ScopeIndex
+from ..core import paths as P
+from ..core.interface import ScopeSpec
+from .flat import GATHER_THRESHOLD
+
+
+@dataclass(frozen=True)
+class ScopeKey:
+    """Canonical identity of a resolved scope inside a batch."""
+    path: P.Path
+    recursive: bool
+    exclude: Tuple[P.Path, ...]
+
+    @classmethod
+    def from_spec(cls, spec: ScopeSpec) -> "ScopeKey":
+        return cls(*spec)
+
+
+@dataclass
+class CachedScope:
+    """A resolved scope pinned with its validity evidence: the scope-epoch
+    tokens of the anchor and every exclusion branch, plus the store size the
+    packed words were built for (ingest growth changes the word count).
+
+    The roaring bitmap is the compact resident form; the id array (gather
+    plan) and the packed words (scan plan) are materialized on first use —
+    each plan reads exactly one of the two, so the other never costs
+    memory."""
+    tokens: Tuple
+    n: int
+    scope_size: int
+    scope: RoaringBitmap
+    _ids: Optional[np.ndarray] = None
+    _words: Optional[np.ndarray] = None
+
+    @property
+    def candidate_ids(self) -> np.ndarray:   # sorted uint32 member ids
+        if self._ids is None:
+            self._ids = self.scope.to_array()
+        return self._ids
+
+    @property
+    def words(self) -> np.ndarray:           # packed uint32, ceil(n/32)
+        if self._words is None:
+            self._words = self.scope.to_words(max(self.n, 1))
+        return self._words
+
+
+class ScopeMaskCache:
+    """Epoch-validated cache of resolved scopes and their packed device masks.
+
+    Correctness contract: an entry is served only while every constituent
+    ``scope_token`` compares equal to the one captured at resolve time and
+    the store size is unchanged. Any DSM (move/merge) or write that touches a
+    constituent scope bumps its epoch and the entry silently misses."""
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._entries: Dict[ScopeKey, CachedScope] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    @staticmethod
+    def _tokens(index: ScopeIndex, key: ScopeKey) -> Optional[Tuple]:
+        toks = [index.scope_token(key.path, key.recursive)]
+        toks += [index.scope_token(b, True) for b in key.exclude]
+        if any(t is None for t in toks):
+            return None              # uncacheable (e.g. missing directory)
+        return tuple(toks)
+
+    def lookup(self, index: ScopeIndex, key: ScopeKey,
+               n: int) -> Optional[CachedScope]:
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        if ent.n != n or self._tokens(index, key) != ent.tokens:
+            del self._entries[key]
+            self.invalidations += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries[key] = self._entries.pop(key)   # LRU: refresh recency
+        return ent
+
+    def store(self, index: ScopeIndex, key: ScopeKey, n: int,
+              scope: RoaringBitmap) -> CachedScope:
+        ent = CachedScope(tokens=self._tokens(index, key) or (), n=n,
+                          scope_size=len(scope), scope=scope)
+        if ent.tokens:
+            if len(self._entries) >= self.max_entries:
+                self._entries.pop(next(iter(self._entries)))
+            self._entries[key] = ent
+        return ent
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "invalidations": self.invalidations}
+
+
+@dataclass
+class PlanGroup:
+    """One unique scope in the batch with its chosen execution plan."""
+    key: ScopeKey
+    request_idx: List[int]           # batch positions sharing this scope
+    scope_size: int
+    plan: str                        # "gather" | "scan" | "empty"
+    entry: CachedScope
+    cache_hit: bool = False
+
+    @property
+    def candidate_ids(self) -> np.ndarray:   # gather plan reads this
+        return self.entry.candidate_ids
+
+    @property
+    def words(self) -> np.ndarray:           # scan plan reads this
+        return self.entry.words
+
+
+@dataclass
+class BatchAccounting:
+    """Shared-resolution accounting for one dsq_batch call: attached to every
+    per-request DSQResult so callers can see how much work was amortized."""
+    batch_size: int = 0
+    unique_scopes: int = 0
+    scope_cache_hits: int = 0
+    launches: int = 0
+    plan_groups: Dict[str, int] = field(default_factory=dict)
+    directory_ns: int = 0            # total resolve+plan time, whole batch
+    ann_ns: int = 0                  # total ranking time, whole batch
+    resolve_stats: ResolveStats = field(default_factory=ResolveStats)
+
+
+def device_popcount(words: np.ndarray) -> int:
+    """On-device selectivity estimate of a packed scope mask: reuses the
+    Pallas ``mask_and_popcount`` kernel (AND with itself is the identity, the
+    popcount side is what we want). For sizing scopes that exist only as
+    device masks — shard-resident masks in the distributed path, or
+    kernel-side composed masks — where no host id set is available."""
+    from ..kernels import ops
+    _, count = ops.mask_and_popcount(words, words)
+    return int(count)
+
+
+class BatchPlanner:
+    def __init__(self, gather_threshold: float = GATHER_THRESHOLD,
+                 cache: Optional[ScopeMaskCache] = None):
+        self.gather_threshold = gather_threshold
+        self.cache = cache if cache is not None else ScopeMaskCache()
+
+    def choose_plan(self, scope_size: int, n: int, k: int) -> str:
+        """Same decision rule as the per-request FlatExecutor path (required
+        for bit-identical batch-vs-loop results)."""
+        if scope_size == 0:
+            return "empty"
+        if scope_size <= max(k, self.gather_threshold * n):
+            return "gather"
+        return "scan"
+
+    def plan(self, index: ScopeIndex, n: int, specs: Sequence[ScopeSpec],
+             k: int, acct: BatchAccounting) -> List[PlanGroup]:
+        """Group a canonicalized batch by unique scope, resolve (cache-first,
+        then one ``resolve_batch`` for the misses), and choose a plan per
+        group by selectivity."""
+        order: Dict[ScopeKey, List[int]] = {}
+        for i, spec in enumerate(specs):
+            order.setdefault(ScopeKey.from_spec(spec), []).append(i)
+        acct.batch_size += len(specs)
+        acct.unique_scopes += len(order)
+
+        resolved: Dict[ScopeKey, CachedScope] = {}
+        misses: List[ScopeKey] = []
+        for key in order:
+            ent = self.cache.lookup(index, key, n)
+            if ent is not None:
+                resolved[key] = ent
+                acct.scope_cache_hits += 1
+            else:
+                misses.append(key)
+        if misses:
+            scopes = index.resolve_batch(
+                [key.path for key in misses],
+                recursive=[key.recursive for key in misses],
+                exclude=[key.exclude for key in misses],
+                stats=acct.resolve_stats)
+            for key, scope in zip(misses, scopes):
+                resolved[key] = self.cache.store(index, key, n, scope)
+
+        groups: List[PlanGroup] = []
+        for key, idxs in order.items():
+            ent = resolved[key]
+            size = ent.scope_size
+            plan = self.choose_plan(size, n, k)
+            groups.append(PlanGroup(
+                key=key, request_idx=idxs, scope_size=size, plan=plan,
+                entry=ent, cache_hit=key not in misses))
+            acct.plan_groups[plan] = acct.plan_groups.get(plan, 0) + 1
+        return groups

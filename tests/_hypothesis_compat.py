@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim (the ``pytest.importorskip`` for property tests).
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt); a module-level
+``pytest.importorskip("hypothesis")`` would skip the *whole* file, losing the
+plain example-based tests that need nothing but pytest. Importing ``given`` /
+``settings`` / ``st`` from here instead keeps those runnable: when hypothesis
+is present the real objects pass through, when it is missing the property
+tests (and only they) collect as skips.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Stub:
+        """Stands in for a strategy object at module level; never drawn."""
+
+        def map(self, fn):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: _Stub()
+
+    st = _Strategies()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        def deco(f):
+            def skipper():
+                pytest.skip("hypothesis not installed (pip install -r "
+                            "requirements-dev.txt)")
+            skipper.__name__ = f.__name__
+            skipper.__doc__ = f.__doc__
+            return skipper
+        return deco

@@ -1,0 +1,259 @@
+"""Batched multi-scope DSQ engine: plan -> packed-mask resolve -> shared
+ranking launches.
+
+Contract under test: ``dsq_batch`` is an *optimization*, never a semantic
+change — bit-identical scores/ids to per-request ``dsq`` loops across all
+three scope strategies and both gather/scan plans, with repeated scopes
+resolved once and scope-epoch cache entries invalidated by DSM.
+"""
+import numpy as np
+import pytest
+
+from repro.core import STRATEGIES, make_scope_index
+from repro.core import paths as P
+from repro.core.idset import RoaringBitmap
+from repro.core.interface import ResolveStats
+from repro.datasets import make_wiki_dir
+from repro.vectordb import BatchPlanner, DirectoryVectorDB, ScopeMaskCache
+from repro.vectordb.flat import GATHER_THRESHOLD
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_dir(scale=0.002, dim=32, n_queries=24, seed=7)
+
+
+def _db(wiki, strategy):
+    db = DirectoryVectorDB(dim=32, scope_strategy=strategy)
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    return db
+
+
+def _mixed_requests(wiki, B):
+    """A serving-shaped batch: repeated anchors, mixed recursive flags,
+    some exclusions — exercises dedup plus both plans."""
+    paths = [wiki.query_anchors[i % 6] for i in range(B)]
+    paths[0] = "/"                       # broad scope -> scan plan
+    rec = [bool(wiki.query_recursive[i % 6]) for i in range(B)]
+    exc = [[wiki.query_anchors[3]] if i % 8 == 5 else [] for i in range(B)]
+    return paths, rec, exc
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_dsq_batch_bit_identical_to_loop(strategy, wiki):
+    db = _db(wiki, strategy)
+    B = len(wiki.queries)
+    paths, rec, exc = _mixed_requests(wiki, B)
+    batch = db.dsq_batch(wiki.queries, paths, k=10, recursive=rec,
+                         exclude=exc)
+    plans = set()
+    for i in range(B):
+        r = db.dsq(wiki.queries[i], paths[i], k=10, recursive=rec[i],
+                   exclude=exc[i])
+        np.testing.assert_array_equal(batch[i].ids, r.ids, err_msg=str(i))
+        np.testing.assert_array_equal(batch[i].scores, r.scores,
+                                      err_msg=str(i))
+        assert batch[i].scope_size == r.scope_size
+        plans.add(batch[i].plan)
+    assert {"gather", "scan"} <= plans, "batch must exercise both plans"
+    acct = batch[0].batch
+    assert acct.batch_size == B
+    assert acct.unique_scopes < B            # repeated scopes deduped
+    assert acct.launches <= acct.unique_scopes
+    # all scan-plan scopes shared ONE launch
+    assert acct.launches == acct.plan_groups.get("gather", 0) + (
+        1 if acct.plan_groups.get("scan", 0) else 0)
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_repeated_batch_hits_scope_cache(strategy, wiki):
+    db = _db(wiki, strategy)
+    B = 16
+    paths, rec, exc = _mixed_requests(wiki, B)
+    db.dsq_batch(wiki.queries[:B], paths, k=10, recursive=rec, exclude=exc)
+    again = db.dsq_batch(wiki.queries[:B], paths, k=10, recursive=rec,
+                         exclude=exc)
+    acct = again[0].batch
+    assert acct.scope_cache_hits > 0
+    # TrieHI can't cache exclusion scopes whose branch dir is missing etc.;
+    # plain anchor scopes must all hit
+    plain = {(P.parse(p), r) for p, r, e in zip(paths, rec, exc) if not e}
+    assert acct.scope_cache_hits >= len(plain)
+
+
+def _synthetic_db(strategy, n_top=6, per_dir=20, dim=16, seed=0):
+    """Deterministic layout: /s0/..../s{n_top-1}/ each with ``per_dir``
+    entries (one nested child dir apiece), so DSM targets always exist."""
+    rng = np.random.default_rng(seed)
+    paths = []
+    for t in range(n_top):
+        for j in range(per_dir):
+            paths.append(f"/s{t}/" if j % 2 else f"/s{t}/inner/")
+    vecs = rng.normal(size=(len(paths), dim)).astype(np.float32)
+    db = DirectoryVectorDB(dim=dim, scope_strategy=strategy)
+    db.ingest(vecs, paths)
+    db.build_ann("flat")
+    queries = rng.normal(size=(12, dim)).astype(np.float32)
+    return db, queries
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_dsm_between_identical_batches_invalidates(strategy):
+    """Acceptance: a MOVE/MERGE between two identical batches must change
+    results exactly as the per-request path does — no stale masks."""
+    db, queries = _synthetic_db(strategy)
+    B = len(queries)
+    paths = ["/s0/" if i % 2 == 0 else "/" for i in range(B)]
+    before = db.dsq_batch(queries, paths, k=10)
+    db.merge("/s0/", "/s1/")              # DSM between the two batches
+    after = db.dsq_batch(queries, paths, k=10)
+    for i in range(B):
+        r = db.dsq(queries[i], paths[i], k=10)
+        np.testing.assert_array_equal(after[i].ids, r.ids)
+        np.testing.assert_array_equal(after[i].scores, r.scores)
+        assert after[i].scope_size == r.scope_size
+        if paths[i] == "/s0/":
+            # the merged-away anchor resolves empty now
+            assert after[i].scope_size == 0 and before[i].scope_size > 0
+    # /s1/ absorbed s0's entries: a cached /s1/ mask would now be stale
+    r1 = db.dsq_batch(queries[:1], ["/s1/"], k=10)
+    assert r1[0].scope_size == db.dsq(queries[0], "/s1/", k=10).scope_size
+    # and a MOVE as well: relocate /s2/ under /s3/
+    pre = db.dsq_batch(queries, ["/s3/"] * B, k=10)
+    db.move("/s2/", "/s3/")
+    post = db.dsq_batch(queries, ["/s3/"] * B, k=10)
+    assert post[0].scope_size > pre[0].scope_size
+    for i in range(B):
+        r = db.dsq(queries[i], "/s3/", k=10)
+        np.testing.assert_array_equal(post[i].ids, r.ids)
+        np.testing.assert_array_equal(post[i].scores, r.scores)
+
+
+def test_triehi_cache_survives_unrelated_dsm():
+    """Per-node epochs: DSM in one subtree must not evict cached masks for
+    unrelated subtrees (the precision TrieHI buys over the global epoch)."""
+    db, queries = _synthetic_db("triehi")
+    db.dsq_batch(queries[:4], ["/s0/"] * 4, k=5)
+    cache = db.planner().cache
+    h0 = cache.hits
+    db.merge("/s4/", "/s5/")              # unrelated subtree DSM
+    db.dsq_batch(queries[:4], ["/s0/"] * 4, k=5)
+    assert cache.hits > h0, "unrelated DSM must not evict the hot scope"
+    # but the merged subtrees themselves re-resolve correctly
+    r = db.dsq_batch(queries[:1], ["/s4/"], k=5)
+    assert r[0].scope_size == 0
+    r5 = db.dsq_batch(queries[:1], ["/s5/"], k=5)
+    assert r5[0].scope_size == db.dsq(queries[0], "/s5/", k=5).scope_size
+
+
+@pytest.mark.parametrize("strategy", ["triehi"])
+def test_executor_params_reach_the_executor(strategy, wiki):
+    """An explicit executor param (e.g. a forced plan) must be honored the
+    same way the per-request path honors it, not silently dropped."""
+    db = _db(wiki, strategy)
+    B = 6
+    paths = [wiki.query_anchors[i % 3] for i in range(B)]
+    batch = db.dsq_batch(wiki.queries[:B], paths, k=10, plan="scan")
+    for i in range(B):
+        r = db.dsq(wiki.queries[i], paths[i], k=10, plan="scan")
+        np.testing.assert_array_equal(batch[i].ids, r.ids)
+        np.testing.assert_array_equal(batch[i].scores, r.scores)
+
+
+def test_plan_choice_matches_flat_rule():
+    planner = BatchPlanner(cache=ScopeMaskCache())
+    n, k = 1000, 10
+    assert planner.choose_plan(0, n, k) == "empty"
+    assert planner.choose_plan(k, n, k) == "gather"
+    assert planner.choose_plan(int(GATHER_THRESHOLD * n), n, k) == "gather"
+    assert planner.choose_plan(int(GATHER_THRESHOLD * n) + 1, n, k) == "scan"
+
+
+def test_device_popcount_matches_host():
+    from repro.vectordb import device_popcount
+    rng = np.random.default_rng(3)
+    ids = np.nonzero(rng.random(5000) < 0.3)[0].astype(np.uint32)
+    bm = RoaringBitmap(ids)
+    assert device_popcount(bm.to_words(5000)) == len(ids)
+
+
+# --------------------------------------------------------------------------
+# cross-strategy parity of the derived/batched resolution APIs on a
+# randomized tree, including post-DSM checks (satellite coverage)
+# --------------------------------------------------------------------------
+
+SEGS = ["a", "b", "c", "d", "e"]
+
+
+def _random_tree_ops(rng, n_ops=120, eid_start=0):
+    ops = []
+    eid = eid_start
+    for _ in range(n_ops):
+        roll = rng.random()
+        path = tuple(rng.choice(SEGS, size=rng.integers(0, 4)))
+        if roll < 0.55:
+            ops.append(("insert", eid, path))
+            eid += 1
+        elif roll < 0.7:
+            ops.append(("mkdir", path))
+        elif roll < 0.85:
+            dst = tuple(rng.choice(SEGS, size=rng.integers(0, 3)))
+            ops.append(("move", path, dst))
+        else:
+            dst = tuple(rng.choice(SEGS, size=rng.integers(1, 3)))
+            ops.append(("merge", path, dst))
+    return ops
+
+
+def _apply(indexes, ops):
+    for op in ops:
+        outcomes = []
+        for idx in indexes:
+            try:
+                getattr(idx, op[0])(*op[1:])
+                outcomes.append("ok")
+            except (KeyError, ValueError) as e:
+                outcomes.append(type(e).__name__)
+        assert len(set(outcomes)) == 1, (op, outcomes)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batch_and_derived_resolution_parity(seed):
+    rng = np.random.default_rng(seed)
+    indexes = [make_scope_index(name) for name in STRATEGIES]
+    _apply(indexes, _random_tree_ops(rng))
+
+    probes = [tuple(rng.choice(SEGS, size=rng.integers(0, 4)))
+              for _ in range(12)] + [()]
+    recs = [bool(rng.integers(0, 2)) for _ in probes]
+    excl = [[tuple(rng.choice(SEGS, size=rng.integers(1, 3)))]
+            if rng.random() < 0.4 else [] for _ in probes]
+
+    def snapshot():
+        per_strategy = []
+        for idx in indexes:
+            stats = ResolveStats()
+            batch = idx.resolve_batch(probes, recursive=recs, exclude=excl,
+                                      stats=stats)
+            sets = [frozenset(int(x) for x in bm.to_array()) for bm in batch]
+            # resolve_batch must agree with one-at-a-time resolution
+            for p, r, e, got in zip(probes, recs, excl, sets):
+                want = (idx.resolve_exclusion(p, e, recursive=r) if e
+                        else idx.resolve(p, recursive=r))
+                assert got == frozenset(int(x) for x in want.to_array())
+            pats = [frozenset(int(x) for x in
+                              idx.resolve_pattern(("*",) + p[1:]).to_array())
+                    for p in probes if p]
+            per_strategy.append((sets, pats))
+        assert per_strategy[0] == per_strategy[1] == per_strategy[2]
+        return per_strategy[0]
+
+    snapshot()
+    # post-DSM: mutate all three identically, then re-check parity; any
+    # strategy holding a stale internal aggregate would diverge here
+    # (eid_start continues past batch one — entry ids are never reused)
+    _apply(indexes, _random_tree_ops(rng, n_ops=30, eid_start=10_000))
+    for idx in indexes:
+        idx.check_invariants()
+    snapshot()

@@ -1,7 +1,8 @@
 """RoaringBitmap: property tests against Python sets (the obvious oracle)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.idset import ARRAY_MAX, RoaringBitmap
 

@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -33,6 +34,65 @@ def test_scoped_topk_sweep(q, n, d, k, metric, dtype):
             idx = int(i1[qi, slot])
             if idx >= 0:
                 assert mask[idx]
+
+
+@pytest.mark.parametrize("q,n,d,k,metric,n_scopes", [
+    (1, 128, 32, 4, "ip", 1),
+    (5, 1000, 64, 10, "ip", 3),
+    (8, 777, 128, 7, "l2", 4),
+    (16, 2048, 256, 16, "l2", 5),
+])
+def test_multi_scope_topk_sweep(q, n, d, k, metric, n_scopes):
+    """Single-launch heterogeneous batch: per-query scope-id indirection into
+    a packed (n_scopes, n/32) mask matrix must match the unfused oracle."""
+    Q = RNG.normal(size=(q, d)).astype(np.float32)
+    X = RNG.normal(size=(n, d)).astype(np.float32)
+    dense = RNG.random((n_scopes, n)) < 0.4
+    pad = (-n) % 32
+    words = np.stack([
+        np.packbits(np.pad(m, (0, pad)), bitorder="little").view(np.uint32)
+        for m in dense])
+    sid = RNG.integers(0, n_scopes, size=q).astype(np.int32)
+    v1, i1 = ops.multi_scope_topk(Q, X, words, sid, k=k, metric=metric)
+    v2, i2 = ref.multi_scope_topk_ref(jnp.asarray(Q), jnp.asarray(X),
+                                      jnp.asarray(words), jnp.asarray(sid),
+                                      k=k, metric=metric)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-4)
+    for qi in range(q):
+        for slot in range(k):
+            idx = int(i1[qi, slot])
+            if idx >= 0:
+                assert dense[sid[qi], idx], (qi, slot, idx)
+
+
+def test_multi_scope_topk_degenerates_to_scoped_topk():
+    """With one scope shared by every query, the multi-scope kernel must
+    reproduce the single-scope kernel exactly."""
+    Q = RNG.normal(size=(4, 64)).astype(np.float32)
+    X = RNG.normal(size=(512, 64)).astype(np.float32)
+    mask = RNG.random(512) < 0.3
+    words = np.packbits(mask, bitorder="little").view(np.uint32)[None, :]
+    sid = np.zeros(4, np.int32)
+    v1, i1 = ops.multi_scope_topk(Q, X, words, sid, k=8)
+    v2, i2 = ops.scoped_topk(Q, X, mask, k=8)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_multi_scope_topk_empty_scope_row():
+    """A scope with zero candidates yields all -1 ids for its queries while
+    other scopes in the same launch are unaffected."""
+    Q = RNG.normal(size=(2, 32)).astype(np.float32)
+    X = RNG.normal(size=(256, 32)).astype(np.float32)
+    full = np.ones(256, bool)
+    words = np.stack([
+        np.zeros(8, np.uint32),
+        np.packbits(full, bitorder="little").view(np.uint32)])
+    sid = np.array([0, 1], np.int32)
+    v, i = ops.multi_scope_topk(Q, X, words, sid, k=4)
+    assert (np.asarray(i)[0] == -1).all()
+    assert (np.asarray(i)[1] >= 0).all()
 
 
 def test_scoped_topk_empty_and_full_mask():

@@ -8,7 +8,8 @@ the TrieHI Eq. 1 aggregate) must hold afterwards.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import STRATEGIES, make_scope_index
 from repro.core import paths as P

@@ -98,6 +98,41 @@ def test_openviking_rag_pipeline(wiki):
     assert all(s["scope_size"] > 0 for s in out["retrieval_stats"])
 
 
+def test_each_request_gets_its_own_prompt(wiki):
+    """Regression: assemble_with_prompt used ``prompts[0]`` for every request
+    in the batch; each request must end with its *own* prompt tokens."""
+    dim = 32
+    ctx = ContextDatabase(dim=dim)
+    rng = np.random.default_rng(2)
+    for i in range(50):
+        ctx.add_context(wiki.vectors[i], wiki.entry_paths[i], "L0",
+                        rng.integers(0, 200, size=8))
+    ctx.build("flat")
+    cfg = smoke_config("qwen3-0.6b").replace(vocab_size=256)
+    params = init_params(model_schema(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype())
+    server = RAGServer(ctx, params, cfg, RAGConfig(k=3, token_budget=32))
+    prompts = [np.full(4, 7, np.int32), np.full(6, 9, np.int32)]
+    retrieved = ctx.retrieve_batch(wiki.queries[:2], ["/", "/"], server.cfg)
+    for i, (hits, _) in enumerate(retrieved):
+        assembled = server.assemble_with_prompt(
+            hits, server._prompt_for(prompts, i))
+        tail = assembled[-len(prompts[i]):]
+        np.testing.assert_array_equal(tail, prompts[i])
+    assert len(server._prompt_for(prompts, 1)) == 6
+    # broadcast (1 prompt, N requests) and empty still work
+    np.testing.assert_array_equal(server._prompt_for([prompts[0]], 1),
+                                  prompts[0])
+    assert server._prompt_for([], 1).size == 0
+    # end-to-end through the batched answer path
+    out = server.answer(query_vecs=wiki.queries[:2], scopes=["/", "/"],
+                        prompts=prompts, max_new_tokens=2)
+    assert out["tokens"].shape == (2, 2)
+    with pytest.raises(ValueError):
+        server.answer(query_vecs=wiki.queries[:3], scopes=["/", "/", "/"],
+                      prompts=prompts, max_new_tokens=1)
+
+
 def test_tiered_budget_assembly():
     ctx = ContextDatabase(dim=8)
     rng = np.random.default_rng(1)
