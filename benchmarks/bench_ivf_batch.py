@@ -1,0 +1,126 @@
+"""Batched device-resident IVF DSQ vs the per-request loop.
+
+The same serving-shaped workload as ``bench_dsq_batch`` (64 concurrent
+requests over a handful of hot scopes), but ranked by the IVF executor. The
+looped path pays 64 scope resolutions, 64 packed-mask builds and 64 small
+probe+gather launches; ``dsq_batch(executor="ivf")`` resolves each unique
+scope once through the epoch-validated mask cache and rides ONE fused
+probe→gather→score→top-k launch for the whole batch.
+
+    PYTHONPATH=src python -m benchmarks.bench_ivf_batch [--scale S] \
+        [--json out.json] [--no-strict]
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.vectordb import DirectoryVectorDB
+
+from .common import DIM, SCALE, datasets
+
+B = 64          # concurrent requests per batch
+K = 10
+NPROBE = 8
+N_UNIQUE = 8    # distinct scopes in the mix
+REPEAT = 3      # timed batches per path (after one warmup)
+
+
+def _requests(ds, rng):
+    anchors = list(dict.fromkeys(ds.query_anchors))[:N_UNIQUE - 1] + ["/"]
+    paths = [anchors[i % len(anchors)] for i in range(B)]
+    rec = [bool(i % 3) for i in range(B)]
+    queries = ds.queries[rng.integers(0, len(ds.queries), size=B)]
+    return queries.astype(np.float32), paths, rec
+
+
+def run(scale: float = SCALE, strict: bool = False) -> List[Dict]:
+    """``strict=True`` (the __main__ default) enforces the >=4x acceptance
+    floor; from the benchmarks.run harness the speedup is just reported so
+    one loaded machine can't abort the other sections."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for ds_name, ds in datasets(scale).items():
+        db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+        db.ingest(ds.vectors, ds.entry_paths)
+        db.build_ann("ivf", n_lists=min(64, max(4, ds.n_entries // 64)))
+        queries, paths, rec = _requests(ds, rng)
+
+        def looped():
+            return [db.dsq(queries[i], paths[i], k=K, recursive=rec[i],
+                           executor="ivf", nprobe=NPROBE) for i in range(B)]
+
+        def batched():
+            return db.dsq_batch(queries, paths, k=K, recursive=rec,
+                                executor="ivf", nprobe=NPROBE)
+
+        # correctness gate before timing anything: identical probed candidate
+        # sets guarantee the same top-k members; batched dot_general low bits
+        # may reorder exact ties, so compare members + scores
+        loop_res, batch_res = looped(), batched()
+        for a, b in zip(loop_res, batch_res):
+            assert (set(a.ids[0][a.ids[0] >= 0].tolist())
+                    == set(b.ids[0][b.ids[0] >= 0].tolist()))
+            np.testing.assert_allclose(
+                np.sort(a.scores[0][np.isfinite(a.scores[0])]),
+                np.sort(b.scores[0][np.isfinite(b.scores[0])]),
+                rtol=1e-4, atol=1e-4)
+            assert a.scope_size == b.scope_size
+
+        def clock(fn):
+            fn()                                  # warmup (jit, cache fill)
+            t0 = time.perf_counter_ns()
+            for _ in range(REPEAT):
+                out = fn()
+            return (time.perf_counter_ns() - t0) / REPEAT / 1e3, out
+
+        loop_us, _ = clock(looped)
+        # fresh planner so the timed batches include resolve work on batch 1
+        db._planners.clear()
+        batch_us, batch_out = clock(batched)
+        acct = batch_out[0].batch
+        cache = db.planner().cache.stats()
+        speedup = loop_us / batch_us
+        rows.append({
+            "name": f"ivf_batch/{ds_name}/loop",
+            "us_per_call": loop_us,
+            "derived": f"launches={B};resolves={B};nprobe={NPROBE}",
+        })
+        rows.append({
+            "name": f"ivf_batch/{ds_name}/batch",
+            "us_per_call": batch_us,
+            "derived": (f"speedup={speedup:.2f}x;"
+                        f"launches={acct.launches};"
+                        f"unique_scopes={acct.unique_scopes};"
+                        f"cache_hit_rate="
+                        f"{cache['hits'] / max(1, cache['hits'] + cache['misses']):.2f}"),
+        })
+        if strict:
+            assert speedup >= 4.0, (
+                f"{ds_name}: batched IVF only {speedup:.2f}x over the loop")
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=SCALE)
+    ap.add_argument("--json", default="",
+                    help="also write the result rows to this JSON file")
+    ap.add_argument("--no-strict", action="store_true",
+                    help="report speedup without enforcing the 4x floor "
+                         "(CI smoke on shared runners)")
+    args = ap.parse_args()
+    from .common import emit
+    rows = run(scale=args.scale, strict=not args.no_strict)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

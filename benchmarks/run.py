@@ -1,11 +1,13 @@
 """Benchmark driver: one section per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--scale 0.01] [--skip roofline]``
-prints ``name,us_per_call,derived`` CSV rows for every benchmark.
+``PYTHONPATH=src python -m benchmarks.run [--scale 0.01] [--only dsq,...]
+[--json out.json]`` prints ``name,us_per_call,derived`` CSV rows for every
+benchmark; ``--json`` additionally dumps ``{section: rows}`` to a file.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,14 +17,16 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.01,
                     help="fraction of published dataset sizes")
     ap.add_argument("--only", default="",
-                    help="comma list: dsq,dsq_batch,e2e,dsm,build,depth,"
-                         "openviking,roofline,kernels")
+                    help="comma list: dsq,dsq_batch,ivf_batch,e2e,dsm,build,"
+                         "depth,openviking,roofline,kernels")
+    ap.add_argument("--json", default="",
+                    help="also write {section: rows} to this JSON file")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
     from . import (bench_build, bench_depth, bench_dsm, bench_dsq_batch,
-                   bench_dsq_e2e, bench_dsq_latency, bench_kernels,
-                   bench_openviking, bench_roofline)
+                   bench_dsq_e2e, bench_dsq_latency, bench_ivf_batch,
+                   bench_kernels, bench_openviking, bench_roofline)
     from .common import emit
 
     sections = [
@@ -30,6 +34,8 @@ def main() -> None:
          lambda: bench_dsq_latency.run(args.scale)),
         ("dsq_batch", "Batched multi-scope DSQ vs per-request loop",
          lambda: bench_dsq_batch.run(args.scale)),
+        ("ivf_batch", "Batched device-resident IVF DSQ vs per-request loop",
+         lambda: bench_ivf_batch.run(args.scale)),
         ("e2e", "Fig 7/8: DSQ quality vs latency",
          lambda: bench_dsq_e2e.run(args.scale)),
         ("dsm", "Fig 9: DSM MOVE/MERGE latency",
@@ -45,6 +51,7 @@ def main() -> None:
         ("kernels", "Pallas kernel microbench (interpret mode)",
          lambda: bench_kernels.run()),
     ]
+    collected = {}
     print("name,us_per_call,derived")
     for key, title, fn in sections:
         if only and key not in only:
@@ -52,10 +59,15 @@ def main() -> None:
         print(f"# --- {title}", flush=True)
         t0 = time.time()
         try:
-            emit(fn())
+            rows = fn()
+            emit(rows)
+            collected[key] = rows
         except Exception as e:  # keep the harness going; report the failure
             print(f"{key},nan,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
         print(f"# --- {title} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -78,3 +78,20 @@ db.merge("/Dept_A/", "/Dept_B/")
 again = db.dsq_batch(queries, scopes, k=3)
 print(f"after MERGE: /Dept_A/ scope={again[2].scope_size} (was "
       f"{results[2].scope_size}); cache {db.planner().cache.stats()}")
+
+# --- batched IVF / PG: the approximate executors ride the same engine ------
+# IVF partitions live in a device-resident padded-CSR layout; the whole batch
+# probes, gathers and ranks in ONE fused launch with each request's packed
+# scope mask ANDed in-register (pass nprobe a list for per-request budgets —
+# one launch per distinct value). PG shares each unique scope's traversal
+# mask across its requests. Deleted entries are tombstoned at the store and
+# masked out of both executors, even unscoped.
+print("\n=== dsq_batch: batched IVF / PG executors ===")
+db.build_ann("ivf", n_lists=4)
+db.build_ann("pg", max_degree=4, ef_construction=16)
+for executor, params in (("ivf", {"nprobe": 2}), ("pg", {"ef_search": 16})):
+    results = db.dsq_batch(queries, scopes, k=3, executor=executor, **params)
+    acct = results[0].batch
+    print(f"{executor}: batch of {acct.batch_size} -> "
+          f"{acct.unique_scopes} scope resolutions, "
+          f"{acct.launches} launches; top={results[0].ids[0].tolist()}")

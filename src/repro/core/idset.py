@@ -294,26 +294,47 @@ class RoaringBitmap:
     # ----------------------------------------------------------- exports
     def to_bool_mask(self, n: int) -> np.ndarray:
         """Dense boolean mask of length n (ids >= n are dropped)."""
-        mask = np.zeros(n, dtype=bool)
-        ids = self.to_array()
-        ids = ids[ids < n]
-        mask[ids] = True
-        return mask
+        bits = np.unpackbits(self.to_words(n).view(np.uint8),
+                             bitorder="little")
+        return bits[:n].astype(bool)
 
     def to_words(self, n: int) -> np.ndarray:
-        """Packed little-endian uint32 words, ceil(n/32) long (device hand-off)."""
-        mask = self.to_bool_mask(((n + 31) // 32) * 32)
-        return np.packbits(mask, bitorder="little").view(np.uint32)
+        """Packed little-endian uint32 words, ceil(n/32) long (device hand-off).
+
+        Emitted directly from the containers: a bitmap container is already
+        a run of 64-bit words (reinterpreted as little-endian uint32 pairs,
+        2048 words per 65536-id container); an array container scatters its
+        bits with one vectorized bitwise_or. Ids >= ceil(n/32)*32 are dropped
+        (same tail semantics as the packbits roundtrip this replaces)."""
+        n_words = (n + 31) // 32
+        out = np.zeros(n_words, dtype=np.uint32)
+        for hi, c in self._containers.items():
+            w0 = hi << 11                 # 65536 bits / 32 words per container
+            if w0 >= n_words:
+                continue
+            if _is_bitmap(c):
+                src = c.view(np.uint32)
+                end = min(w0 + 2 * _BM_WORDS, n_words)
+                out[w0:end] = src[: end - w0]
+            else:
+                idx = w0 + (c >> 5).astype(np.int64)
+                keep = idx < n_words
+                lows = c[keep] if not keep.all() else c
+                np.bitwise_or.at(
+                    out, idx[keep] if not keep.all() else idx,
+                    np.uint32(1) << (lows & np.uint16(31)).astype(np.uint32))
+        return out
 
     @staticmethod
     def pack_words(bitmaps: Iterable["RoaringBitmap"], n: int) -> np.ndarray:
         """Stack several scopes into one packed-mask matrix
         (n_scopes, ceil(n/32)) uint32 — the multi-scope kernel's indirection
         target and the distributed search's per-shard hand-off format."""
-        rows = [bm.to_words(n) for bm in bitmaps]
-        if not rows:
-            return np.zeros((0, (n + 31) // 32), dtype=np.uint32)
-        return np.stack(rows)
+        bms = list(bitmaps)
+        out = np.zeros((len(bms), (n + 31) // 32), dtype=np.uint32)
+        for i, bm in enumerate(bms):
+            out[i] = bm.to_words(n)
+        return out
 
     # --------------------------------------------------------------- misc
     def memory_bytes(self) -> int:

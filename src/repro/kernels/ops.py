@@ -14,6 +14,7 @@ import numpy as np
 from . import ref
 from .bitmap_ops import mask_and_popcount as _mask_and_popcount
 from .flash_decode import flash_decode as _flash_decode
+from .scoped_topk import ivf_gather_topk as _ivf_gather_topk
 from .scoped_topk import multi_scope_topk as _multi_scope_topk
 from .scoped_topk import scoped_topk as _scoped_topk
 
@@ -78,6 +79,27 @@ def multi_scope_topk(queries, rows, mask_words, scope_ids, k: int = 10,
     return vals[:nq], ids[:nq]
 
 
+def ivf_gather_topk(queries, cand_rows, cand_ids, qwords, k: int = 10,
+                    metric: str = "ip", block_c: int = 1024,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused scope-masked top-k over gathered IVF candidate tiles: pads the
+    candidate axis to a block multiple (-1 ids / zero rows, AND-neutral) and
+    the mask words to a lane multiple."""
+    interpret = _INTERPRET if interpret is None else interpret
+    queries = jnp.asarray(queries, dtype=jnp.float32)
+    cand_rows = jnp.asarray(cand_rows)
+    cand_ids = jnp.asarray(cand_ids, dtype=jnp.int32)
+    qwords = jnp.asarray(qwords, dtype=jnp.uint32)
+    block_c = min(block_c, max(128, cand_rows.shape[1]))
+    rp, _ = _pad_to(cand_rows, 1, block_c)
+    cp, _ = _pad_to(cand_ids, 1, block_c, value=-1)
+    wp, _ = _pad_to(qwords, 1, 8 if interpret else 128)
+    vals, ids = _ivf_gather_topk(queries, rp, cp, wp, k=k, block_c=block_c,
+                                 metric=metric, interpret=interpret)
+    return vals, ids
+
+
 def mask_and_popcount(a, b, block: int = 2048,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
@@ -107,5 +129,5 @@ def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
     return _flash_decode(q, kp, vp, mp, block_s=block_s, interpret=interpret)
 
 
-__all__ = ["scoped_topk", "multi_scope_topk", "mask_and_popcount",
-           "flash_decode", "ref"]
+__all__ = ["scoped_topk", "multi_scope_topk", "ivf_gather_topk",
+           "mask_and_popcount", "flash_decode", "ref"]

@@ -58,6 +58,32 @@ def multi_scope_topk_ref(queries: jax.Array, rows: jax.Array,
     return vals, ids.astype(jnp.int32)
 
 
+def ivf_gather_topk_ref(queries: np.ndarray, cand_rows: np.ndarray,
+                        cand_ids: np.ndarray, qwords: np.ndarray,
+                        k: int = 10, metric: str = "ip"
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Unfused numpy oracle for the batched-IVF gather→score→top-k launch:
+    materializes every (b, c) score, expands each query's packed scope words,
+    full stable sort. cand_ids -1 marks CSR padding slots."""
+    q = np.asarray(queries, dtype=np.float32)
+    x = np.asarray(cand_rows, dtype=np.float32)
+    cand = np.asarray(cand_ids, dtype=np.int64)
+    words = np.asarray(qwords, dtype=np.uint32)
+    scores = np.einsum("bcd,bd->bc", x, q)
+    if metric == "l2":
+        scores = 2.0 * scores - np.einsum("bcd,bcd->bc", x, x)
+    safe = np.maximum(cand, 0)
+    rows_idx = np.arange(q.shape[0])[:, None]
+    bits = (words[rows_idx, safe >> 5] >> (safe & 31).astype(np.uint32)) & 1
+    mask = (cand >= 0) & (bits != 0)
+    scores = np.where(mask, scores.astype(np.float32), NEG_INF)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(scores, order, axis=1)
+    ids = np.take_along_axis(cand, order, axis=1)
+    ids = np.where(vals <= NEG_INF, -1, ids)
+    return vals, ids.astype(np.int32)
+
+
 def mask_and_popcount_ref(a: jax.Array, b: jax.Array
                           ) -> Tuple[jax.Array, jax.Array]:
     words = a & b

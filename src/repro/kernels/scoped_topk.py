@@ -127,6 +127,96 @@ def _multi_kernel(q_ref, x_ref, words_ref, sid_ref, vals_ref, ids_ref,
         ids_ref[...] = acc_i[...]
 
 
+def _ivf_kernel(q_ref, x_ref, cid_ref, w_ref, vals_ref, ids_ref,
+                acc_v, acc_i, *, k: int, metric: str):
+    """Batched-IVF back half: stream one query's probed candidate tiles
+    through VMEM. Each grid row owns one query; the candidate tile carries
+    explicit store ids (-1 = CSR padding), and the query's packed scope-mask
+    words are ANDed in-register — a gathered-tile variant of
+    ``_multi_kernel`` where ids come from the tile instead of an iota."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...]                                            # (1, d)
+    x = x_ref[0]                                              # (block_c, d)
+    scores = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (1, block_c)
+    if metric == "l2":
+        sq = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32), axis=1)
+        scores = 2.0 * scores - sq[None, :]
+    cand = cid_ref[...]                                       # (1, block_c)
+    valid = cand >= 0
+    safe = jnp.maximum(cand, 0)
+    w = w_ref[...]                                            # (1, n_words)
+    qbits = jnp.take_along_axis(w, safe >> 5, axis=1)
+    mask = valid & (
+        ((qbits >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0)
+    scores = jnp.where(mask, scores, NEG_INF)
+    ids = jnp.where(mask, cand, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_c", "metric", "interpret"))
+def ivf_gather_topk(queries: jax.Array, cand_rows: jax.Array,
+                    cand_ids: jax.Array, qwords: jax.Array,
+                    k: int = 10, block_c: int = 1024, metric: str = "ip",
+                    interpret: bool = True
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused scope-masked top-k over gathered IVF candidate tiles.
+
+    queries (B, d) f32; cand_rows (B, C, d) gathered probed rows; cand_ids
+    (B, C) int32 store ids (-1 = padding slot); qwords (B, n_words) packed
+    uint32 scope mask per query (already scope-id-resolved and tombstone-
+    ANDed). Returns (values (B, k) f32, ids (B, k) int32; -1 = none).
+    C % block_c == 0 (ops.py pads with -1 ids / zero rows).
+    """
+    B, d = queries.shape
+    C = cand_rows.shape[1]
+    assert C % block_c == 0, (C, block_c)
+    assert d % 128 == 0 or interpret, "lane-dim should be 128-aligned on TPU"
+    grid = (B, C // block_c)
+    n_words = qwords.shape[1]
+    kernel = functools.partial(_ivf_kernel, k=k, metric=metric)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, block_c, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+            pl.BlockSpec((1, n_words), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, c: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), cand_rows, cand_ids.astype(jnp.int32),
+      qwords.astype(jnp.uint32))
+    return vals, ids
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "block_q", "block_n", "metric", "interpret"))

@@ -102,7 +102,10 @@ class DirectoryVectorDB:
         for idx in self.namespaces.values():
             if idx.catalog.get(entry_id) is not None:
                 idx.delete(entry_id)
-        # store rows are append-only; deleted ids simply leave every scope.
+        # Store rows are append-only: deleted ids leave every scope AND get a
+        # store-level tombstone, so unscoped ivf/pg probes (whose partition
+        # lists / graph nodes still reference the row) mask them out too.
+        self.store.mark_deleted(entry_id)
 
     # ------------------------------------------------------------------ DSQ
     def dsq(self, queries: np.ndarray, path: str, k: int = 10,
@@ -150,24 +153,83 @@ class DirectoryVectorDB:
         bit-identical to calling :meth:`dsq` per request (with
         ``use_pallas=True`` the shared scan launch uses the fused TPU kernel
         instead — same top-k members, low-bit/tie order may differ), but the
-        directory and kernel work is amortized (see ``DSQResult.batch``)."""
+        directory and kernel work is amortized (see ``DSQResult.batch``).
+
+        All three executors are batch-planned: ``flat`` shares one
+        multi-scope scan launch, ``ivf`` shares one fused
+        probe→gather→score→top-k launch per distinct ``nprobe`` (identical
+        probed candidate sets and top-k members as the loop; low score bits
+        may differ with batch shape, like the fused-kernel caveat), and
+        ``pg`` shares each unique scope's traversal mask (bit-identical).
+        The per-request fallback loop remains only for executor params the
+        planner cannot plan."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         B = queries.shape[0]
         if len(paths) != B:
             raise ValueError(f"{len(paths)} paths for {B} query rows")
-        idx = self.namespaces[namespace]
+        if namespace not in self.namespaces:
+            raise KeyError(namespace)
         ex = self.executors.get(executor)
         if ex is None:
             raise ValueError(f"executor {executor!r} not built "
                              f"(have {sorted(self.executors)})")
+        if isinstance(ex, IVFIndex) and set(executor_params) <= {"nprobe"}:
+            return self._dsq_batch_ivf(ex, queries, paths, k, recursive,
+                                       exclude, namespace, use_pallas,
+                                       executor_params.get("nprobe", 8))
+        if isinstance(ex, PGIndex) and set(executor_params) <= {"ef_search"}:
+            return self._dsq_batch_pg(ex, queries, paths, k, recursive,
+                                      exclude, namespace,
+                                      executor_params.get("ef_search", 64))
         if not isinstance(ex, FlatExecutor) or executor_params:
-            # non-flat executors have no shared-mask plan, and explicit
-            # executor params (e.g. plan="scan") must reach the executor
-            # exactly as the per-request path would pass them — dedup the
-            # resolution only, loop the executor
+            # explicit executor params the planner cannot plan (e.g. a forced
+            # plan="scan") must reach the executor exactly as the per-request
+            # path would pass them — dedup the resolution only, loop the
+            # executor
             return self._dsq_batch_fallback(queries, paths, k, recursive,
                                             exclude, namespace, executor,
                                             **executor_params)
+
+        def launch_flat(groups, out_scores, out_ids, acct):
+            # one launch per gather group
+            for g in groups:
+                if g.plan != "gather":
+                    continue
+                rows = np.asarray(g.request_idx)
+                s, i = ex.search(queries[rows], k,
+                                 candidate_ids=g.candidate_ids,
+                                 plan="gather")
+                out_scores[rows] = s
+                out_ids[rows] = i
+                acct.launches += 1
+            # ONE launch for every scan-plan request in the batch
+            scan_groups = [g for g in groups if g.plan == "scan"]
+            if scan_groups:
+                words = np.stack([g.words for g in scan_groups])
+                rows, sids = [], []
+                for si, g in enumerate(scan_groups):
+                    rows.extend(g.request_idx)
+                    sids.extend([si] * len(g.request_idx))
+                rows = np.asarray(rows)
+                s, i = ex.search_multi(queries[rows], words,
+                                       np.asarray(sids, np.int32), k,
+                                       use_pallas=use_pallas)
+                out_scores[rows] = s
+                out_ids[rows] = i
+                acct.launches += 1
+
+        return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
+                                       namespace, launch_flat)
+
+    def _dsq_batch_planned(self, queries, paths, k, recursive, exclude,
+                           namespace, launch, label: Optional[str] = None
+                           ) -> List[DSQResult]:
+        """Shared batch driver: normalize → plan (cache-first) → timed
+        executor launches via ``launch(groups, out_scores, out_ids, acct)``
+        → per-request result assembly. Every planned executor path (flat,
+        ivf, pg) differs only in its launch callback."""
+        B = queries.shape[0]
+        idx = self.namespaces[namespace]
         acct = BatchAccounting()
         t0 = time.perf_counter_ns()
         specs = normalize_batch(paths, recursive, exclude)
@@ -175,52 +237,90 @@ class DirectoryVectorDB:
             idx, len(self.store), specs, k, acct)
         t1 = time.perf_counter_ns()
         acct.directory_ns = t1 - t0
-
         out_scores = np.full((B, k), -np.inf, np.float32)
         out_ids = np.full((B, k), -1, np.int64)
+        launch(groups, out_scores, out_ids, acct)
+        acct.ann_ns = time.perf_counter_ns() - t1
+
         plan_of = {}
         for g in groups:
             for i in g.request_idx:
                 plan_of[i] = g
-        # one launch per gather group
-        for g in groups:
-            if g.plan != "gather":
-                continue
-            rows = np.asarray(g.request_idx)
-            s, i = ex.search(queries[rows], k, candidate_ids=g.candidate_ids,
-                             plan="gather")
-            out_scores[rows] = s
-            out_ids[rows] = i
-            acct.launches += 1
-        # ONE launch for every scan-plan request in the batch
-        scan_groups = [g for g in groups if g.plan == "scan"]
-        if scan_groups:
-            words = np.stack([g.words for g in scan_groups])
-            rows, sids = [], []
-            for si, g in enumerate(scan_groups):
-                rows.extend(g.request_idx)
-                sids.extend([si] * len(g.request_idx))
-            rows = np.asarray(rows)
-            s, i = ex.search_multi(queries[rows], words,
-                                   np.asarray(sids, np.int32), k,
-                                   use_pallas=use_pallas)
-            out_scores[rows] = s
-            out_ids[rows] = i
-            acct.launches += 1
-        t2 = time.perf_counter_ns()
-        acct.ann_ns = t2 - t1
-
         dir_share = acct.directory_ns // max(B, 1)
         ann_share = acct.ann_ns // max(B, 1)
         results = []
         for i in range(B):
             g = plan_of[i]
+            plan = g.plan if label is None or g.plan == "empty" else label
             results.append(DSQResult(
                 ids=out_ids[i:i + 1], scores=out_scores[i:i + 1],
                 scope_size=g.scope_size, directory_ns=dir_share,
                 ann_ns=ann_share, resolve_stats=acct.resolve_stats,
-                plan=g.plan, scope_shared=len(g.request_idx), batch=acct))
+                plan=plan, scope_shared=len(g.request_idx), batch=acct))
         return results
+
+    def _dsq_batch_ivf(self, ex, queries, paths, k, recursive, exclude,
+                       namespace, use_pallas, nprobe) -> List[DSQResult]:
+        """Batched IVF DSQ: unique scopes resolve once through the
+        epoch-validated mask cache, their packed words stack into one mask
+        matrix, and all requests sharing an ``nprobe`` ride ONE fused
+        probe→gather→score→top-k launch (one launch per distinct per-request
+        ``nprobe`` when a sequence is passed)."""
+        B = queries.shape[0]
+        # clamp to the effective range up front so values the executor would
+        # clamp anyway don't split into extra launches (each nprobe is a
+        # distinct jit specialization)
+        clamp = lambda v: max(1, min(int(v), ex.n_lists))
+        if np.ndim(nprobe) == 0:
+            npr = [clamp(nprobe)] * B
+        else:
+            npr = [clamp(x) for x in nprobe]
+            if len(npr) != B:
+                raise ValueError(f"{len(npr)} nprobe values for {B} requests")
+
+        def launch_ivf(groups, out_scores, out_ids, acct):
+            live = [g for g in groups if g.plan != "empty"]
+            if not live:
+                return
+            words = np.stack([g.words for g in live])
+            req = [(i, si) for si, g in enumerate(live)
+                   for i in g.request_idx]
+            for val in sorted({npr[i] for i, _ in req}):
+                rows = np.asarray([i for i, _ in req if npr[i] == val])
+                sids = np.asarray([si for i, si in req if npr[i] == val],
+                                  np.int32)
+                s, i = ex.search_multi(queries[rows], words, sids, k,
+                                       nprobe=val, use_pallas=use_pallas)
+                out_scores[rows] = s
+                out_ids[rows] = i
+                acct.launches += 1
+
+        return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
+                                       namespace, launch_ivf, label="ivf")
+
+    def _dsq_batch_pg(self, ex, queries, paths, k, recursive, exclude,
+                      namespace, ef_search) -> List[DSQResult]:
+        """Batched PG DSQ: unique scopes resolve once (cache-first), each
+        group's dense bool mask is built once and shared by every request in
+        the group — one ``search_batch`` call per unique scope."""
+
+        def launch_pg(groups, out_scores, out_ids, acct):
+            alive = self.store.alive_bool()
+            for g in groups:
+                if g.plan == "empty":
+                    continue
+                valid = g.bool_mask
+                if alive is not None:
+                    valid = valid & alive
+                rows = np.asarray(g.request_idx)
+                s, i = ex.search_batch(queries[rows], k, valid_mask=valid,
+                                       ef_search=ef_search)
+                out_scores[rows] = s
+                out_ids[rows] = i
+                acct.launches += 1
+
+        return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
+                                       namespace, launch_pg, label="pg")
 
     def _dsq_batch_fallback(self, queries, paths, k, recursive, exclude,
                             namespace, executor, **executor_params

@@ -28,7 +28,20 @@ class PGIndex:
         self.neighbors = np.full((n, max_degree), -1, dtype=np.int32)
         self._n_edges = np.zeros(n, dtype=np.int32)
         self._rng = np.random.default_rng(seed)
+        # generation-stamped visited buffer: one array reused by every _beam
+        # call (build runs one beam per inserted node, so a fresh O(n)
+        # allocation per call would make construction quadratic)
+        self._visit_gen = np.zeros(n, dtype=np.int64)
+        self._gen = 0
         self._build()
+        # deterministic search entry (the node nearest the dataset centroid):
+        # a fixed, central entry makes looped and batched searches identical
+        # and removes per-query RNG draws from the hot path
+        self._entry = 0
+        if n:
+            mu = store.vectors.mean(axis=0)
+            self._entry = int(np.argmin(
+                self._distances(mu, np.arange(n, dtype=np.int64))))
 
     # ------------------------------------------------------------------ build
     def _distances(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
@@ -81,8 +94,13 @@ class PGIndex:
               ) -> Tuple[np.ndarray, int]:
         """Best-first beam search; returns (ids best-first, hops). When
         ``valid_mask`` is given, only valid ids enter the *result* heap but all
-        nodes are traversable (mask-aware post-collection)."""
-        visited = {entry}
+        nodes are traversable (mask-aware post-collection). Per-hop neighbor
+        filtering and scoring are vectorized (visited is the reusable
+        generation-stamped mask, distances one batched call per hop)."""
+        self._gen += 1
+        gen = self._gen
+        visit_gen = self._visit_gen
+        visit_gen[entry] = gen
         d0 = float(self._distances(q, np.asarray([entry]))[0])
         frontier = [(d0, entry)]                       # min-heap by distance
         # result: max-heap of (−distance, id), only scope-valid ids
@@ -97,19 +115,19 @@ class PGIndex:
                 break
             hops += 1
             nbrs = self.neighbors[node][: self._n_edges[node]]
-            nbrs = [int(x) for x in nbrs if int(x) not in visited]
-            if limit_ids is not None:
-                nbrs = [x for x in nbrs if x < limit_ids or inserted]
-            if not nbrs:
+            if limit_ids is not None and not inserted:
+                nbrs = nbrs[nbrs < limit_ids]
+            nbrs = nbrs[visit_gen[nbrs] != gen]
+            if nbrs.size == 0:
                 continue
-            visited.update(nbrs)
-            dists = self._distances(q, np.asarray(nbrs))
-            for nb, dist in zip(nbrs, dists):
-                dist = float(dist)
+            visit_gen[nbrs] = gen
+            dists = self._distances(q, nbrs)
+            check = None if valid_mask is None else valid_mask[nbrs]
+            for j, (nb, dist) in enumerate(zip(nbrs.tolist(), dists.tolist())):
                 if (not result or len(result) < target
                         or dist < -result[0][0]):
                     heapq.heappush(frontier, (dist, nb))
-                    if valid_mask is None or valid_mask[nb]:
+                    if check is None or check[j]:
                         heapq.heappush(result, (-dist, nb))
                         if len(result) > target:
                             heapq.heappop(result)
@@ -119,22 +137,43 @@ class PGIndex:
     def nbytes(self) -> int:
         return self.neighbors.nbytes + self._n_edges.nbytes
 
+    def _valid_mask(self, candidate_ids: Optional[np.ndarray]
+                    ) -> Optional[np.ndarray]:
+        """Scope ∧ alive result-collection mask (None = everything valid)."""
+        n = len(self.store)
+        alive = self.store.alive_bool()
+        if candidate_ids is None:
+            return alive
+        valid = np.zeros(n, dtype=bool)
+        ids = np.asarray(candidate_ids, dtype=np.int64)
+        valid[ids[ids < n]] = True
+        if alive is not None:
+            valid &= alive
+        return valid
+
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
                ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+        return self.search_batch(queries, k,
+                                 valid_mask=self._valid_mask(candidate_ids),
+                                 ef_search=ef_search)
+
+    def search_batch(self, queries: np.ndarray, k: int,
+                     valid_mask: Optional[np.ndarray] = None,
+                     ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched front door: one shared result-collection mask for the
+        whole query batch (hoisted out of the per-query loop — dsq_batch
+        passes each scope group's cached bool mask straight in)."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         nq = queries.shape[0]
         n = len(self.store)
-        valid = None
-        if candidate_ids is not None:
-            valid = np.zeros(n, dtype=bool)
-            valid[candidate_ids] = True
         out_scores = np.full((nq, k), -np.inf, dtype=np.float32)
         out_ids = np.full((nq, k), -1, dtype=np.int64)
+        if n == 0:
+            return out_scores, out_ids
         for qi in range(nq):
-            entry = int(self._rng.integers(n))
-            ids, _ = self._beam(queries[qi], entry, ef_search,
-                                valid_mask=valid, k=k)
+            ids, _ = self._beam(queries[qi], self._entry, ef_search,
+                                valid_mask=valid_mask, k=k)
             ids = ids[:k]
             if len(ids) == 0:
                 continue

@@ -1,14 +1,23 @@
 """IVF (inverted-file) partition-based ANN executor (the paper's IVF path).
 
-K-means (Lloyd) runs as a jit'd JAX loop; search probes the ``nprobe`` nearest
-partitions and scores candidates, intersected with the directory scope set.
+K-means (Lloyd) runs as a jit'd JAX loop. Partitions live in a device-resident
+**padded-CSR layout**: one flat id array where every list occupies a
+TILE-aligned region (padding slots hold the invalid id ``n``), plus per-list
+offsets/lengths. Search is batched end to end — query→centroid distances and
+``nprobe`` selection for the whole batch in one jit, then a single
+gather→score→top-k launch over the probed tiles with the directory scope
+applied as packed uint32 mask words ANDed in-register (either the jnp twin
+``_ivf_batch_jnp`` or the Pallas ``ivf_gather_topk`` kernel).
+
 The paper's finding that IVF shows a *flat* latency-vs-depth profile (Fig. 11)
 falls out naturally: partition probing dominates and the scope intersection is
-a cheap bitmap AND.
+a cheap bitmap AND. ``search_loop`` keeps the original per-query host loop as
+the reference oracle.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -17,6 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from .store import VectorStore
+
+# Per-list padding granularity of the CSR layout. The fused launch expands
+# every probed list to the layout's widest padded region, so a small tile
+# keeps that expansion tight; the kernel streams the *gathered* (contiguous)
+# candidate tiles, so list-region alignment never touches TPU lane tiling.
+TILE = 32
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters",))
@@ -47,6 +62,91 @@ def _assign(data: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmin(d2, axis=1)
 
 
+@dataclass(frozen=True)
+class CSRLayout:
+    """Device-resident padded-CSR partition layout. ``flat_ids`` is one flat
+    int32 array; list ``c`` occupies ``[offsets[c], offsets[c]+aligned[c])``
+    with its ``aligned[c] - len`` padding slots (and the final extra slot that
+    out-of-region gathers clamp to) holding the invalid id ``n``.
+
+    The fused launch expands every probed list to ``max_aligned`` (static
+    shapes), so batch cost scales with the *widest* partition: heavily skewed
+    k-means (one list holding most of the store) degrades the batched path
+    toward a full scan. Keep ``n_lists`` sized so lists stay balanced."""
+    offsets: jnp.ndarray     # (n_lists,) int32, TILE-aligned region starts
+    aligned: jnp.ndarray     # (n_lists,) int32, padded region lengths
+    flat_ids: jnp.ndarray    # (sum(aligned) + 1,) int32
+    max_aligned: int         # static: widest padded region
+    n: int                   # store size the sentinel was built for
+
+
+def _probe_and_expand(queries, centers, offsets, aligned, flat_ids,
+                      nprobe: int, max_aligned: int):
+    """Whole-batch probe selection + candidate-tile expansion. Centroid
+    distances use the elementwise (q-c)^2 form so every element depends only
+    on its own (query, center) pair — batch-size invariant, which keeps
+    dsq_batch bit-identical to the per-request loop."""
+    d2 = jnp.sum((queries[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+    _, probe = jax.lax.top_k(-d2, nprobe)                 # (B, nprobe)
+    off = jnp.take(offsets, probe)                        # (B, nprobe)
+    algn = jnp.take(aligned, probe)
+    within = jnp.arange(max_aligned, dtype=jnp.int32)
+    idx = off[..., None] + within[None, None, :]
+    idx = jnp.where(within[None, None, :] < algn[..., None],
+                    idx, flat_ids.shape[0] - 1)           # clamp to sentinel
+    return jnp.take(flat_ids, idx).reshape(queries.shape[0], -1)   # (B, C)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "nprobe", "max_aligned", "metric"))
+def _ivf_batch_jnp(queries, centers, offsets, aligned, flat_ids, data, sq,
+                   words, sids, k: int, nprobe: int, max_aligned: int,
+                   metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-launch batched IVF: probe -> gather -> scope-mask -> top-k.
+    The jnp twin of the Pallas ``ivf_gather_topk`` kernel.
+
+    The probe stage is batch-size invariant (elementwise distances), so the
+    candidate set per query is always identical to the per-request loop's;
+    candidate scoring uses the fast batched dot_general, whose low score
+    bits may differ across batch shapes (same top-k members barring exact
+    score ties — the same caveat as the flat path's fused kernel)."""
+    n = data.shape[0]
+    cand = _probe_and_expand(queries, centers, offsets, aligned, flat_ids,
+                             nprobe, max_aligned)         # (B, C), n=invalid
+    valid = cand < n
+    safe = jnp.where(valid, cand, 0)
+    rows = jnp.take(data, safe, axis=0)                   # (B, C, d)
+    scores = jax.lax.dot_general(
+        rows, queries, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # (B, C)
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.take(sq, safe)
+    qwords = jnp.take(words, sids, axis=0)                # (B, n_words)
+    qbits = jnp.take_along_axis(qwords, safe >> 5, axis=1)
+    bit = (qbits >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = valid & (bit != 0)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    vals, loc = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(cand, loc, axis=1)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return vals, ids
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "max_aligned"))
+def _ivf_expand_gather(queries, centers, offsets, aligned, flat_ids, data,
+                       words, sids, nprobe: int, max_aligned: int):
+    """Pallas-path front half: probe + candidate expansion + row/word gather.
+    Returns (cand (B, C) int32 with -1 invalid, rows (B, C, d),
+    qwords (B, n_words))."""
+    n = data.shape[0]
+    cand = _probe_and_expand(queries, centers, offsets, aligned, flat_ids,
+                             nprobe, max_aligned)
+    cand = jnp.where(cand < n, cand, -1)
+    rows = jnp.take(data, jnp.maximum(cand, 0), axis=0)
+    qwords = jnp.take(words, sids, axis=0)
+    return cand, rows, qwords
+
+
 class IVFIndex:
     name = "ivf"
 
@@ -65,44 +165,186 @@ class IVFIndex:
         self.centers = np.asarray(_lloyd(jnp.asarray(data), jnp.asarray(init),
                                          n_iters))
         assign = np.asarray(_assign(jnp.asarray(data), jnp.asarray(self.centers)))
-        self.lists: List[np.ndarray] = [
-            np.nonzero(assign == c)[0].astype(np.uint32)
-            for c in range(n_lists)]
+        # amortized-capacity member arrays: _data[c][:_len[c]] are list c's ids
+        order = np.argsort(assign, kind="stable")
+        counts = np.bincount(assign, minlength=n_lists)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        sorted_ids = order.astype(np.uint32)
+        self._data: List[np.ndarray] = []
+        self._len = np.zeros(n_lists, dtype=np.int64)
+        for c in range(n_lists):
+            members = sorted_ids[starts[c]: starts[c + 1]]
+            arr = np.empty(max(8, len(members)), dtype=np.uint32)
+            arr[: len(members)] = members
+            self._data.append(arr)
+            self._len[c] = len(members)
         self.assign = assign
+        self._layout: Optional[CSRLayout] = None
+        self._centers_dev: Optional[jnp.ndarray] = None
+
+    @property
+    def lists(self) -> List[np.ndarray]:
+        """Trimmed per-partition id views (capacity tails excluded)."""
+        return [d[: int(ln)] for d, ln in zip(self._data, self._len)]
+
+    def _append(self, c: int, new: np.ndarray) -> None:
+        ln = int(self._len[c])
+        need = ln + len(new)
+        cur = self._data[c]
+        if need > len(cur):           # amortized doubling, not per-call concat
+            grown = np.empty(max(2 * len(cur), need), dtype=np.uint32)
+            grown[:ln] = cur[:ln]
+            self._data[c] = cur = grown
+        cur[ln:need] = new
+        self._len[c] = need
 
     def add(self, ids: np.ndarray) -> None:
         """Route freshly-added store rows into their partitions."""
+        ids = np.asarray(ids, dtype=np.uint32)
+        if len(ids) == 0:
+            return
         rows = self.store.vectors[ids]
         assign = np.asarray(_assign(jnp.asarray(rows), jnp.asarray(self.centers)))
         for c in np.unique(assign):
-            self.lists[int(c)] = np.concatenate(
-                [self.lists[int(c)], ids[assign == c].astype(np.uint32)])
+            self._append(int(c), ids[assign == c])
+        self._layout = None
+
+    def layout(self) -> CSRLayout:
+        """Build (or reuse) the device-resident padded-CSR layout."""
+        if self._layout is None or self._layout.n != len(self.store):
+            aligned = ((self._len + TILE - 1) // TILE) * TILE
+            offsets = np.zeros(self.n_lists, dtype=np.int64)
+            if self.n_lists > 1:
+                np.cumsum(aligned[:-1], out=offsets[1:])
+            n = len(self.store)
+            flat = np.full(int(aligned.sum()) + 1, n, dtype=np.int32)
+            for c in range(self.n_lists):
+                ln = int(self._len[c])
+                flat[offsets[c]: offsets[c] + ln] = self._data[c][:ln]
+            self._layout = CSRLayout(
+                offsets=jnp.asarray(offsets.astype(np.int32)),
+                aligned=jnp.asarray(aligned.astype(np.int32)),
+                flat_ids=jnp.asarray(flat),
+                max_aligned=int(aligned.max()) if self.n_lists else 0,
+                n=n)
+        return self._layout
 
     def nbytes(self) -> int:
-        return self.centers.nbytes + sum(lst.nbytes for lst in self.lists)
+        return self.centers.nbytes + sum(d.nbytes for d in self._data)
 
+    # ----------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
                nprobe: int = 8) -> Tuple[np.ndarray, np.ndarray]:
-        """Probe nprobe partitions per query; returns (scores, ids) (q, k)."""
+        """Probe nprobe partitions per query; returns (scores, ids) (q, k).
+        Device-batched single-scope front door over :meth:`search_multi`."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        n = len(self.store)
+        n_words = max((n + 31) // 32, 1)
+        if candidate_ids is None:
+            words = np.full(n_words, 0xFFFFFFFF, dtype=np.uint32)
+            if n % 32:
+                words[-1] = np.uint32((1 << (n % 32)) - 1)
+        else:
+            ids = np.asarray(candidate_ids, dtype=np.int64)
+            ids = ids[ids < n]
+            if len(ids) * 16 > n:
+                # broad scope: dense mask + packbits beats the per-id
+                # scattered bitwise_or.at
+                mask = np.zeros(n_words * 32, dtype=bool)
+                mask[ids] = True
+                words = np.packbits(mask, bitorder="little").view(np.uint32)
+            else:
+                words = np.zeros(n_words, dtype=np.uint32)
+                np.bitwise_or.at(words, ids >> 5,
+                                 np.uint32(1) << (ids & 31).astype(np.uint32))
+        sids = np.zeros(queries.shape[0], dtype=np.int32)
+        return self.search_multi(queries, words[None, :], sids, k,
+                                 nprobe=nprobe)
+
+    def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
+                     scope_ids: np.ndarray, k: int, nprobe: int = 8,
+                     use_pallas: bool = False
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """One launch for a heterogeneous scope batch: queries (B, d), packed
+        scope masks (n_scopes, ceil(n/32)) uint32, per-query scope row ids
+        (B,). Tombstoned rows are ANDed out of every scope before the launch.
+        Returns (scores, ids) both (B, k); ids int64 with -1 padding."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        B = queries.shape[0]
+        out_scores = np.full((B, k), -np.inf, dtype=np.float32)
+        out_ids = np.full((B, k), -1, dtype=np.int64)
+        n = len(self.store)
+        if n == 0:
+            return out_scores, out_ids
+        lay = self.layout()
+        nprobe = int(max(1, min(nprobe, self.n_lists)))
+        C = nprobe * lay.max_aligned
+        if C == 0:
+            return out_scores, out_ids
+        mask_words = np.asarray(mask_words, dtype=np.uint32)
+        alive = self.store.alive_words()
+        if alive is not None:
+            mask_words = mask_words & alive[None, :]
+        kk = min(k, C)
+        if self._centers_dev is None:
+            self._centers_dev = jnp.asarray(self.centers)
+        args = (jnp.asarray(queries), self._centers_dev,
+                lay.offsets, lay.aligned, lay.flat_ids,
+                self.store.device_vectors())
+        # sq is only read on the (trace-time static) l2 branch; skip the O(n)
+        # host→device transfer entirely for ip/cos
+        sq = (self.store.device_sq_norms() if self.store.metric == "l2"
+              else jnp.zeros(0, dtype=jnp.float32))
+        words_d = jnp.asarray(mask_words)
+        sids_d = jnp.asarray(scope_ids, dtype=jnp.int32)
+        if use_pallas:
+            from ..kernels import ops as kops
+            cand, rows, qwords = _ivf_expand_gather(
+                *args, words_d, sids_d, nprobe=nprobe,
+                max_aligned=lay.max_aligned)
+            vals, ids = kops.ivf_gather_topk(queries, rows, cand, qwords,
+                                             k=kk, metric=self.store.metric)
+        else:
+            vals, ids = _ivf_batch_jnp(
+                *args, sq, words_d, sids_d, k=kk, nprobe=nprobe,
+                max_aligned=lay.max_aligned, metric=self.store.metric)
+        vals = np.array(vals, dtype=np.float32)
+        ids = np.asarray(ids, dtype=np.int64)
+        vals[ids < 0] = -np.inf
+        out_scores[:, :kk] = vals
+        out_ids[:, :kk] = ids
+        return out_scores, out_ids
+
+    def search_loop(self, queries: np.ndarray, k: int,
+                    candidate_ids: Optional[np.ndarray] = None,
+                    nprobe: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-query host loop — the pre-batching reference oracle the
+        device path is tested against."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         nq = queries.shape[0]
-        # query-centroid distances (all queries at once)
-        qc = (np.sum(queries * queries, axis=1)[:, None]
-              - 2.0 * queries @ self.centers.T
-              + np.sum(self.centers * self.centers, axis=1)[None, :])
-        probe = np.argsort(qc, axis=1)[:, :nprobe]
+        # same elementwise (q-c)^2 form as the device probe stage, so both
+        # paths rank near-equidistant centroids identically
+        qc = np.sum((queries[:, None, :] - self.centers[None, :, :]) ** 2,
+                    axis=-1)
+        nprobe = int(max(1, min(nprobe, self.n_lists)))
+        # stable sort breaks exact-distance ties by lowest index, same as the
+        # device path's lax.top_k
+        probe = np.argsort(qc, axis=1, kind="stable")[:, :nprobe]
         cand_mask: Optional[np.ndarray] = None
         if candidate_ids is not None:
             cand_mask = np.zeros(len(self.store), dtype=bool)
             cand_mask[candidate_ids] = True
+        alive = self.store.alive_bool()
+        if alive is not None:
+            cand_mask = alive if cand_mask is None else cand_mask & alive
         out_scores = np.full((nq, k), -np.inf, dtype=np.float32)
         out_ids = np.full((nq, k), -1, dtype=np.int64)
         metric = self.store.metric
         data = self.store.vectors
+        lists = self.lists
         for qi in range(nq):
-            cands = np.concatenate([self.lists[c] for c in probe[qi]]) \
-                if nprobe > 0 else np.empty(0, np.uint32)
+            cands = np.concatenate([lists[c] for c in probe[qi]])
             if cand_mask is not None and len(cands):
                 cands = cands[cand_mask[cands]]
             if len(cands) == 0:

@@ -52,15 +52,16 @@ class CachedScope:
     packed words were built for (ingest growth changes the word count).
 
     The roaring bitmap is the compact resident form; the id array (gather
-    plan) and the packed words (scan plan) are materialized on first use —
-    each plan reads exactly one of the two, so the other never costs
-    memory."""
+    plan), the packed words (scan-plan flat + batched IVF launches) and the
+    dense bool mask (PG traversal) are materialized on first use — each
+    executor reads exactly one form, so the others never cost memory."""
     tokens: Tuple
     n: int
     scope_size: int
     scope: RoaringBitmap
     _ids: Optional[np.ndarray] = None
     _words: Optional[np.ndarray] = None
+    _bool: Optional[np.ndarray] = None
 
     @property
     def candidate_ids(self) -> np.ndarray:   # sorted uint32 member ids
@@ -73,6 +74,12 @@ class CachedScope:
         if self._words is None:
             self._words = self.scope.to_words(max(self.n, 1))
         return self._words
+
+    @property
+    def bool_mask(self) -> np.ndarray:       # dense (n,) bool
+        if self._bool is None:
+            self._bool = self.scope.to_bool_mask(self.n)
+        return self._bool
 
 
 class ScopeMaskCache:
@@ -143,8 +150,12 @@ class PlanGroup:
         return self.entry.candidate_ids
 
     @property
-    def words(self) -> np.ndarray:           # scan plan reads this
+    def words(self) -> np.ndarray:           # scan plan / batched IVF
         return self.entry.words
+
+    @property
+    def bool_mask(self) -> np.ndarray:       # PG traversal reads this
+        return self.entry.bool_mask
 
 
 @dataclass

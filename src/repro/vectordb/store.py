@@ -25,6 +25,15 @@ class VectorStore:
         self._n = 0
         self._device_cache: Optional[jnp.ndarray] = None
         self._norms_cache: Optional[np.ndarray] = None
+        self._device_norms: Optional[jnp.ndarray] = None
+        # Tombstones: rows are append-only, so a delete marks the id dead
+        # here and every executor consults the alive mask at query time
+        # (scoped searches drop deleted ids via the directory layer already;
+        # this covers unscoped ivf/pg probes whose partition lists / graph
+        # nodes still reference the row).
+        self._deleted = np.zeros(capacity, dtype=bool)
+        self._n_deleted = 0
+        self._alive_words: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return self._n
@@ -44,6 +53,10 @@ class VectorStore:
                               self.dim), dtype=np.float32)
             grown[: self._n] = self._rows[: self._n]
             self._rows = grown
+        if self._n + n_new > self._deleted.shape[0]:
+            grown_d = np.zeros(self._rows.shape[0], dtype=bool)
+            grown_d[: self._n] = self._deleted[: self._n]
+            self._deleted = grown_d
         if self.metric == "cos":
             norms = np.linalg.norm(vectors, axis=1, keepdims=True)
             vectors = vectors / np.maximum(norms, 1e-12)
@@ -52,7 +65,48 @@ class VectorStore:
         self._n += n_new
         self._device_cache = None
         self._norms_cache = None
+        self._alive_words = None
         return ids
+
+    # ----------------------------------------------------------- tombstones
+    def mark_deleted(self, ids) -> None:
+        """Tombstone rows (append-only store; the rows stay but every
+        executor masks them out of results)."""
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < self._n)]
+        fresh = ids[~self._deleted[ids]]
+        if len(fresh) == 0:
+            return
+        self._deleted[fresh] = True
+        self._n_deleted += len(fresh)
+        self._alive_words = None
+
+    @property
+    def n_deleted(self) -> int:
+        return self._n_deleted
+
+    def deleted_mask(self) -> np.ndarray:
+        return self._deleted[: self._n]
+
+    def alive_bool(self) -> Optional[np.ndarray]:
+        """(n,) bool alive mask, or None when nothing is deleted (the common
+        case — callers skip the AND entirely)."""
+        if self._n_deleted == 0:
+            return None
+        return ~self._deleted[: self._n]
+
+    def alive_words(self) -> Optional[np.ndarray]:
+        """Packed uint32 alive mask, ceil(n/32) words, or None when nothing
+        is deleted. Cached until the next add/mark_deleted."""
+        if self._n_deleted == 0:
+            return None
+        if (self._alive_words is None
+                or self._alive_words.shape[0] != (self._n + 31) // 32):
+            padded = np.zeros(((self._n + 31) // 32) * 32, dtype=bool)
+            padded[: self._n] = ~self._deleted[: self._n]
+            self._alive_words = np.packbits(
+                padded, bitorder="little").view(np.uint32)
+        return self._alive_words
 
     def device_vectors(self) -> jnp.ndarray:
         if self._device_cache is None or self._device_cache.shape[0] != self._n:
@@ -64,6 +118,12 @@ class VectorStore:
             self._norms_cache = np.einsum(
                 "nd,nd->n", self.vectors, self.vectors).astype(np.float32)
         return self._norms_cache
+
+    def device_sq_norms(self) -> jnp.ndarray:
+        if (self._device_norms is None
+                or self._device_norms.shape[0] != self._n):
+            self._device_norms = jnp.asarray(self.sq_norms())
+        return self._device_norms
 
     def nbytes(self) -> int:
         return self._n * self.dim * 4

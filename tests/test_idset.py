@@ -64,6 +64,37 @@ def test_dense_mask_and_words():
     assert sorted(np.nonzero(unpacked)[0].tolist()) == sorted(set(ids))
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1 << 18), max_size=300),
+       st.integers(0, (1 << 18) + 40))
+def test_to_words_fast_path_matches_packbits(a, n):
+    """The container-direct word emitter must be bit-identical to the
+    dense-mask + packbits roundtrip it replaced, for any export length."""
+    r = RoaringBitmap(a)
+    padded = ((n + 31) // 32) * 32
+    mask = np.zeros(padded, dtype=bool)
+    keep = np.asarray([x for x in set(a) if x < padded], dtype=np.int64)
+    mask[keep] = True
+    want = np.packbits(mask, bitorder="little").view(np.uint32)
+    assert np.array_equal(r.to_words(n), want)
+    bmask = r.to_bool_mask(n)
+    assert bmask.dtype == bool and bmask.shape == (n,)
+    assert np.array_equal(bmask, mask[:n])
+
+
+def test_to_words_dense_container_fast_path():
+    """A bitmap container (> ARRAY_MAX dense ids) is emitted by direct word
+    copy; spot-check both container kinds in one set."""
+    dense = np.arange(ARRAY_MAX + 200, dtype=np.uint32)        # bitmap
+    sparse = np.asarray([70000, 70003, 200000], np.uint32)     # arrays
+    r = RoaringBitmap(np.concatenate([dense, sparse]))
+    n = 200001
+    words = r.to_words(n)
+    got = np.nonzero(np.unpackbits(words.view(np.uint8),
+                                   bitorder="little")[:n])[0]
+    assert np.array_equal(got, np.sort(np.concatenate([dense, sparse])))
+
+
 def test_union_many_and_copy_isolation():
     parts = [RoaringBitmap(range(i, i + 10)) for i in range(0, 100, 10)]
     u = RoaringBitmap.union_many(parts)
