@@ -7,8 +7,9 @@ executor.
 from . import paths
 from .catalog import Catalog, PathRef
 from .idset import RoaringBitmap
-from .interface import ResolveStats, ScopeIndex
-from .ops import DSM, DSMExecutor, DSMJournal, DSQ, RegionLockManager
+from .interface import DSMDelta, DSMStats, ResolveStats, ScopeIndex
+from .ops import (DSM, DSMBatchResult, DSMExecutor, DSMJournal, DSQ,
+                  RegionLockManager, regions_overlap)
 from .pe_offline import PEOfflineIndex
 from .pe_online import PEOnlineIndex
 from .triehi import TrieHIIndex, TrieNode
@@ -30,7 +31,8 @@ def make_scope_index(name: str) -> ScopeIndex:
 
 __all__ = [
     "paths", "Catalog", "PathRef", "RoaringBitmap", "ResolveStats",
-    "ScopeIndex", "DSQ", "DSM", "DSMExecutor", "DSMJournal",
-    "RegionLockManager", "PEOnlineIndex", "PEOfflineIndex", "TrieHIIndex",
-    "TrieNode", "STRATEGIES", "make_scope_index",
+    "ScopeIndex", "DSQ", "DSM", "DSMBatchResult", "DSMDelta", "DSMExecutor",
+    "DSMJournal", "DSMStats", "RegionLockManager", "regions_overlap",
+    "PEOnlineIndex", "PEOfflineIndex", "TrieHIIndex", "TrieNode",
+    "STRATEGIES", "make_scope_index",
 ]

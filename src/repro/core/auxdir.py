@@ -65,6 +65,19 @@ class AuxDirectoryIndex:
         if parent_kids is not None:
             parent_kids.discard(path[-1])
 
+    def remove_subtree(self, path: P.Path) -> List[P.Path]:
+        """Drop every directory key at-or-below ``path`` and detach it from
+        its parent; returns the removed keys (the O(m_u) REMOVE expansion)."""
+        if path == P.ROOT:
+            raise ValueError("cannot remove root")
+        keys = self.subtree_keys(path)
+        for key in keys:
+            self._children.pop(key, None)
+        parent_kids = self._children.get(path[:-1])
+        if parent_kids is not None:
+            parent_kids.discard(path[-1])
+        return keys
+
     def rekey_subtree(self, src: P.Path, dst: P.Path) -> List[P.Path]:
         """Re-key every directory under ``src`` to live under ``dst``
         (prefix substitution). Returns the list of OLD subtree keys, deepest

@@ -7,8 +7,10 @@ which is what makes the layer ANN-index independent (design requirement 4).
 from __future__ import annotations
 
 import abc
+import threading
 from dataclasses import dataclass, field
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, Hashable, List, Optional, Sequence, Tuple,
+                    Union)
 
 from . import paths as P
 from .catalog import Catalog
@@ -27,6 +29,84 @@ class ResolveStats:
     unique_scopes: int = 0         # distinct scope resolutions performed
     dedup_hits: int = 0            # requests served by an earlier resolution
     stage_ns: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class DSMStats:
+    """Per-op maintenance write-accounting (the measurable Table II contrast).
+
+    The counters separate *structural* writes (containers/keys/nodes touched)
+    from *content* writes (entry memberships re-filed), because that split is
+    exactly what distinguishes the strategies: expansion designs re-file
+    posting content under new keys (O(m_u) keys, and for PE-OFFLINE the
+    t-fold materialized copies of every subtree entry), while TrieHI relinks
+    whole subtrees and only runs bounded ancestor-chain aggregate updates.
+
+    * ``keys_rekeyed``       path keys remapped (the PE-* O(m_u) term)
+    * ``postings_touched``   posting-list / aggregate containers written,
+                             whether re-keyed or updated in place
+    * ``ids_rewritten``      posting *content* re-filed under a different
+                             key/container (PE-*: every id of every moved
+                             posting; TrieHI: only merge-conflict locals)
+    * ``agg_bits_updated``   ids added/removed by in-place ancestor-chain
+                             set ops (|S| per chain node, all strategies)
+    * ``nodes_relinked``     whole-subtree topology relinks (TrieHI O(1) move)
+    * ``nodes_dissolved``    merge conflict reconciliations (TrieHI)
+    * ``dirs_removed``       directory keys/nodes dropped by REMOVE
+    * ``entries_unbound``    catalog unbinds (REMOVE)
+    * ``epochs_bumped``      scope-epoch bumps (cache-invalidation breadth)
+    """
+
+    ops: int = 0
+    keys_rekeyed: int = 0
+    postings_touched: int = 0
+    ids_rewritten: int = 0
+    agg_bits_updated: int = 0
+    nodes_relinked: int = 0
+    nodes_dissolved: int = 0
+    dirs_removed: int = 0
+    entries_unbound: int = 0
+    epochs_bumped: int = 0
+    stage_ns: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def write_touches(self) -> int:
+        """Structural write count: keys + containers + topology updates."""
+        return (self.keys_rekeyed + self.postings_touched
+                + self.nodes_relinked + self.nodes_dissolved
+                + self.dirs_removed)
+
+    def merge(self, other: "DSMStats") -> "DSMStats":
+        for f in ("ops", "keys_rekeyed", "postings_touched", "ids_rewritten",
+                  "agg_bits_updated", "nodes_relinked", "nodes_dissolved",
+                  "dirs_removed", "entries_unbound", "epochs_bumped"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        for k, v in other.stage_ns.items():
+            self.stage_ns[k] = self.stage_ns.get(k, 0) + v
+        return self
+
+
+@dataclass(frozen=True)
+class DSMDelta:
+    """Structural-mutation delta event, emitted by strategies with stable
+    scope-token anchors (TrieHI) so downstream mask caches can *patch*
+    surviving entries in place instead of evicting them.
+
+    ``delta`` is the moved/removed aggregate S; ``removed_from``/``added_to``
+    list ``(token_anchor, old_epoch, new_epoch)`` triples for every node
+    whose inclusive aggregate lost/gained exactly S, captured atomically
+    with the epoch bump (under the aggregate latch). A cache entry may take
+    the delta only while its stored token equals ``(anchor, old_epoch)`` —
+    an entry already stale for another reason (an earlier un-evented epoch
+    bump, e.g. a point delete) must evict, not be re-stamped valid — and
+    then advances to ``(anchor, new_epoch)``. Nodes whose change is *not*
+    exactly S (e.g. merge-conflict children) are deliberately absent: their
+    cached entries self-evict through the normal token mismatch."""
+
+    kind: str
+    delta: RoaringBitmap
+    removed_from: Tuple[Tuple[object, int, int], ...] = ()
+    added_to: Tuple[Tuple[object, int, int], ...] = ()
 
 
 # A batch item's scope: (parsed anchor, recursive, parsed exclude branches).
@@ -67,9 +147,31 @@ class ScopeIndex(abc.ABC):
         # (insert/delete/move/merge). The coarse fallback for strategies
         # without per-node state; TrieHI refines this to per-node epochs.
         self._epoch = 0
+        # Aggregate-container latch. Region locks serialize DSM ops on
+        # overlapping subtrees, but posting/aggregate containers are shared
+        # *across* regions: two region-disjoint moves both update ancestors
+        # up to their common ancestor, and ingest/resolve touch the same
+        # containers with no region lock at all. Every in-place container
+        # mutation (DSM ancestor updates, insert/delete chains) and every
+        # container read that iterates one (resolve's copy/union) takes this
+        # short latch; subtree-local re-keying stays concurrent.
+        self._agg_latch = threading.Lock()
+        self._dsm_listeners: List[Callable[[DSMDelta], None]] = []
 
     def _bump_epoch(self) -> None:
         self._epoch += 1
+
+    # ----------------------------------------------------------- DSM deltas
+    def subscribe_dsm(self, fn: Callable[[DSMDelta], None]) -> None:
+        """Register a listener for :class:`DSMDelta` events (mask caches).
+        Only strategies with patchable scope tokens (TrieHI) emit; the PE-*
+        global-epoch token cannot be patched, so they stay silent and their
+        cached scopes die through the normal epoch mismatch."""
+        self._dsm_listeners.append(fn)
+
+    def _emit_dsm(self, event: DSMDelta) -> None:
+        for fn in self._dsm_listeners:
+            fn(event)
 
     # ------------------------------------------------------------ mask cache
     def scope_token(self, path: P.Path | str,
@@ -142,13 +244,22 @@ class ScopeIndex(abc.ABC):
 
     # ------------------------------------------------------------------ DSM
     @abc.abstractmethod
-    def move(self, src: P.Path | str, new_parent: P.Path | str) -> None:
+    def move(self, src: P.Path | str, new_parent: P.Path | str,
+             stats: Optional[DSMStats] = None) -> None:
         """Relocate subtree ``src`` to become a child of ``new_parent``."""
 
     @abc.abstractmethod
-    def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
+    def merge(self, src: P.Path | str, dst: P.Path | str,
+              stats: Optional[DSMStats] = None) -> None:
         """Merge subtree ``src`` into existing subtree ``dst`` (recursive
         name-conflict reconciliation); ``src`` ceases to exist."""
+
+    @abc.abstractmethod
+    def remove(self, path: P.Path | str,
+               stats: Optional[DSMStats] = None) -> RoaringBitmap:
+        """Recursively remove subtree ``path``: drop its postings/nodes,
+        unbind its entries from the catalog, and return the removed entry-id
+        set (the caller tombstones those ids at the vector store)."""
 
     # ------------------------------------------------------------ inspection
     @abc.abstractmethod

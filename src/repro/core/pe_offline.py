@@ -14,7 +14,7 @@ from . import paths as P
 from .auxdir import AuxDirectoryIndex
 from .catalog import PathRef
 from .idset import RoaringBitmap
-from .interface import ResolveStats, ScopeIndex
+from .interface import DSMStats, ResolveStats, ScopeIndex
 
 
 def _ancestor_split(src: P.Path, dst: P.Path) -> Tuple[List[P.Path], List[P.Path]]:
@@ -59,10 +59,11 @@ class PEOfflineIndex(ScopeIndex):
         self.aux.register(path)
         # path expander: exact parent -> full ancestor sequence; one posting
         # update per ancestor (the t-fold ingestion amplification of Table I)
-        for pref in P.ancestors(path, include_self=True):
-            self._posting(pref).add(entry_id)
+        with self._agg_latch:
+            for pref in P.ancestors(path, include_self=True):
+                self._posting(pref).add(entry_id)
+            self._bump_epoch()
         self.catalog.bind(entry_id, self._ref(path))
-        self._bump_epoch()
 
     def bulk_insert(self, entry_ids, dir_paths) -> None:
         import numpy as np
@@ -72,22 +73,25 @@ class PEOfflineIndex(ScopeIndex):
         for path, ids in groups.items():
             self.aux.register(path)
             arr = np.asarray(ids, np.uint32)
-            for pref in P.ancestors(path, include_self=True):
-                self._posting(pref).add_many(arr)
+            with self._agg_latch:
+                for pref in P.ancestors(path, include_self=True):
+                    self._posting(pref).add_many(arr)
             ref = self._ref(path)
             self.catalog.bind_many(ids, ref)
-        self._bump_epoch()
+        with self._agg_latch:
+            self._bump_epoch()
 
     def delete(self, entry_id: int) -> None:
         ref = self.catalog.get(entry_id)
         if ref is None:
             raise KeyError(entry_id)
-        for pref in P.ancestors(ref.path, include_self=True):
-            posting = self.postings.get(pref)
-            if posting is not None:
-                posting.remove(entry_id)
+        with self._agg_latch:
+            for pref in P.ancestors(ref.path, include_self=True):
+                posting = self.postings.get(pref)
+                if posting is not None:
+                    posting.remove(entry_id)
+            self._bump_epoch()
         self.catalog.unbind(entry_id)
-        self._bump_epoch()
 
     # ----------------------------------------------------------------- read
     def resolve(self, path: P.Path | str, recursive: bool = True,
@@ -95,8 +99,9 @@ class PEOfflineIndex(ScopeIndex):
         path = P.parse(path)
         if recursive:
             t0 = time.perf_counter_ns()
-            posting = self.postings.get(path)
-            out = posting.copy() if posting is not None else RoaringBitmap()
+            with self._agg_latch:    # vs in-place posting writes
+                posting = self.postings.get(path)
+                out = posting.copy() if posting is not None else RoaringBitmap()
             if stats is not None:
                 stats.posting_fetches += 1
                 stats.stage_ns["bitmap_fetch"] = (
@@ -112,12 +117,13 @@ class PEOfflineIndex(ScopeIndex):
         t1 = time.perf_counter_ns()
         children = RoaringBitmap()
         fetches = 1
-        for name in child_names:
-            cp = self.postings.get(path + (name,))
-            if cp is not None:
-                children |= cp
-                fetches += 1
-        out = total - children
+        with self._agg_latch:
+            for name in child_names:
+                cp = self.postings.get(path + (name,))
+                if cp is not None:
+                    children |= cp
+                    fetches += 1
+            out = total - children
         t2 = time.perf_counter_ns()
         if stats is not None:
             stats.posting_fetches += fetches
@@ -129,7 +135,8 @@ class PEOfflineIndex(ScopeIndex):
         return out
 
     # ------------------------------------------------------------------ DSM
-    def move(self, src: P.Path | str, new_parent: P.Path | str) -> None:
+    def move(self, src: P.Path | str, new_parent: P.Path | str,
+             stats: Optional[DSMStats] = None) -> None:
         src = P.parse(src)
         new_parent = P.parse(new_parent)
         if not src:
@@ -142,28 +149,41 @@ class PEOfflineIndex(ScopeIndex):
         if dst in self.aux:
             raise ValueError(f"target {P.to_str(dst)} exists; use merge()")
         agg = self.postings.get(src, RoaringBitmap())
-        # step 1: O(m_u) subtree path-key remapping
+        # step 1: O(m_u) subtree path-key remapping — every re-keyed posting
+        # is ancestor-materialized, so each subtree entry is re-filed once
+        # per subtree level below it (the t-fold amplification of Table II)
         old_keys = self.aux.rekey_subtree(src, dst)
         for old in old_keys:
             new = P.replace_prefix(old, src, dst)
             if old in self.postings:
-                self.postings[new] = self.postings.pop(old)
+                posting = self.postings[new] = self.postings.pop(old)
+                if stats is not None:
+                    stats.postings_touched += 1
+                    stats.ids_rewritten += len(posting)
             for ref in self.refs.pop(old, []):
                 ref.path = new
                 self.refs.setdefault(new, []).append(ref)
         # step 2: O(t) ancestor-membership updates outside the subtree
         old_only, new_only = _ancestor_split(src, dst)
-        for anc in old_only:
-            posting = self.postings.get(anc)
-            if posting is not None:
-                posting -= agg
-        for anc in new_only:
-            posting = self._posting(anc)
-            posting |= agg
-        # root of the common chain requires no change (contains S before+after)
-        self._bump_epoch()
+        with self._agg_latch:
+            for anc in old_only:
+                posting = self.postings.get(anc)
+                if posting is not None:
+                    posting -= agg
+            for anc in new_only:
+                posting = self._posting(anc)
+                posting |= agg
+            # root of the common chain needs no change (holds S before+after)
+            self._bump_epoch()
+        if stats is not None:
+            stats.ops += 1
+            stats.keys_rekeyed += len(old_keys)
+            stats.postings_touched += len(old_only) + len(new_only)
+            stats.agg_bits_updated += len(agg) * (len(old_only) + len(new_only))
+            stats.epochs_bumped += 1
 
-    def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
+    def merge(self, src: P.Path | str, dst: P.Path | str,
+              stats: Optional[DSMStats] = None) -> None:
         src = P.parse(src)
         dst = P.parse(dst)
         if not src or not dst:
@@ -173,18 +193,23 @@ class PEOfflineIndex(ScopeIndex):
         if dst not in self.aux:
             raise KeyError(P.to_str(dst))
         P.validate_disjoint(src, dst)
-        agg = self.postings.get(src, RoaringBitmap()).copy()
+        with self._agg_latch:
+            agg = self.postings.get(src, RoaringBitmap()).copy()
         # source-target key processing, deepest-first (O(m_u) + conflict unions)
         src_keys = sorted(self.aux.subtree_keys(src), key=len, reverse=True)
         for old in src_keys:
             new = P.replace_prefix(old, src, dst)
             posting = self.postings.pop(old, None)
             if posting is not None:
+                if stats is not None:
+                    stats.postings_touched += 1
+                    stats.ids_rewritten += len(posting)
                 tgt = self.postings.get(new)
                 if tgt is None:
                     self.postings[new] = posting
                 else:
-                    tgt |= posting
+                    with self._agg_latch:
+                        tgt |= posting
             for ref in self.refs.pop(old, []):
                 ref.path = new
                 self.refs.setdefault(new, []).append(ref)
@@ -193,14 +218,59 @@ class PEOfflineIndex(ScopeIndex):
         # of src; add S to new-only proper ancestors of dst. dst itself was
         # updated by the src->dst root key merge above.
         old_only, new_only = _ancestor_split(src, dst)
-        for anc in old_only:
-            posting = self.postings.get(anc)
-            if posting is not None:
-                posting -= agg
-        for anc in new_only:
-            posting = self._posting(anc)
-            posting |= agg
-        self._bump_epoch()
+        with self._agg_latch:
+            for anc in old_only:
+                posting = self.postings.get(anc)
+                if posting is not None:
+                    posting -= agg
+            for anc in new_only:
+                posting = self._posting(anc)
+                posting |= agg
+            self._bump_epoch()
+        if stats is not None:
+            stats.ops += 1
+            stats.keys_rekeyed += len(src_keys)
+            stats.postings_touched += len(old_only) + len(new_only)
+            stats.agg_bits_updated += len(agg) * (len(old_only) + len(new_only))
+            stats.epochs_bumped += 1
+
+    def remove(self, path: P.Path | str,
+               stats: Optional[DSMStats] = None) -> RoaringBitmap:
+        """Recursive subtree removal: drop every materialized subtree
+        posting (each entry re-filed out once per level — the same t-fold
+        write amplification the move path pays), then subtract S from the
+        surviving proper ancestors."""
+        p = P.parse(path)
+        if not p:
+            raise ValueError("cannot remove root")
+        if p not in self.aux:
+            raise KeyError(P.to_str(p))
+        with self._agg_latch:
+            removed = self.postings.get(p, RoaringBitmap()).copy()
+        keys = self.aux.remove_subtree(p)
+        for key in keys:
+            posting = self.postings.pop(key, None)
+            if posting is not None and stats is not None:
+                stats.postings_touched += 1
+                stats.ids_rewritten += len(posting)
+            self.refs.pop(key, None)
+        ancestors = list(P.ancestors(p, include_self=False))
+        with self._agg_latch:
+            for anc in ancestors:
+                posting = self.postings.get(anc)
+                if posting is not None:
+                    posting -= removed
+            self._bump_epoch()
+        for eid in removed.to_array():
+            self.catalog.unbind(int(eid))
+        if stats is not None:
+            stats.ops += 1
+            stats.dirs_removed += len(keys)
+            stats.postings_touched += len(ancestors)
+            stats.agg_bits_updated += len(removed) * len(ancestors)
+            stats.entries_unbound += len(removed)
+            stats.epochs_bumped += 1
+        return removed
 
     # ------------------------------------------------------------ inspection
     def has_dir(self, path: P.Path | str) -> bool:

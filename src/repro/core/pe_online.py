@@ -13,7 +13,7 @@ from . import paths as P
 from .auxdir import AuxDirectoryIndex
 from .catalog import PathRef
 from .idset import RoaringBitmap
-from .interface import ResolveStats, ScopeIndex
+from .interface import DSMStats, ResolveStats, ScopeIndex
 
 
 class PEOnlineIndex(ScopeIndex):
@@ -42,12 +42,13 @@ class PEOnlineIndex(ScopeIndex):
     def insert(self, entry_id: int, dir_path: P.Path | str) -> None:
         path = P.parse(dir_path)
         self.aux.register(path)
-        posting = self.postings.get(path)
-        if posting is None:
-            posting = self.postings[path] = RoaringBitmap()
-        posting.add(entry_id)
+        with self._agg_latch:
+            posting = self.postings.get(path)
+            if posting is None:
+                posting = self.postings[path] = RoaringBitmap()
+            posting.add(entry_id)
+            self._bump_epoch()
         self.catalog.bind(entry_id, self._ref(path))
-        self._bump_epoch()
 
     def bulk_insert(self, entry_ids, dir_paths) -> None:
         import numpy as np
@@ -56,23 +57,26 @@ class PEOnlineIndex(ScopeIndex):
             groups.setdefault(P.parse(path), []).append(eid)
         for path, ids in groups.items():
             self.aux.register(path)
-            posting = self.postings.get(path)
-            if posting is None:
-                posting = self.postings[path] = RoaringBitmap()
-            posting.add_many(np.asarray(ids, np.uint32))
+            with self._agg_latch:
+                posting = self.postings.get(path)
+                if posting is None:
+                    posting = self.postings[path] = RoaringBitmap()
+                posting.add_many(np.asarray(ids, np.uint32))
             ref = self._ref(path)
             self.catalog.bind_many(ids, ref)
-        self._bump_epoch()
+        with self._agg_latch:
+            self._bump_epoch()
 
     def delete(self, entry_id: int) -> None:
         ref = self.catalog.get(entry_id)
         if ref is None:
             raise KeyError(entry_id)
-        posting = self.postings.get(ref.path)
-        if posting is not None:
-            posting.remove(entry_id)
+        with self._agg_latch:
+            posting = self.postings.get(ref.path)
+            if posting is not None:
+                posting.remove(entry_id)
+            self._bump_epoch()
         self.catalog.unbind(entry_id)
-        self._bump_epoch()
 
     # ----------------------------------------------------------------- read
     def resolve(self, path: P.Path | str, recursive: bool = True,
@@ -80,8 +84,9 @@ class PEOnlineIndex(ScopeIndex):
         path = P.parse(path)
         if not recursive:
             t0 = time.perf_counter_ns()
-            posting = self.postings.get(path)
-            out = posting.copy() if posting is not None else RoaringBitmap()
+            with self._agg_latch:    # vs in-place posting writes
+                posting = self.postings.get(path)
+                out = posting.copy() if posting is not None else RoaringBitmap()
             if stats is not None:
                 stats.posting_fetches += 1
                 stats.stage_ns["bitmap_fetch"] = (
@@ -94,11 +99,12 @@ class PEOnlineIndex(ScopeIndex):
         t1 = time.perf_counter_ns()
         out = RoaringBitmap()
         fetches = 0
-        for k in keys:
-            posting = self.postings.get(k)
-            if posting is not None:
-                out |= posting
-                fetches += 1
+        with self._agg_latch:
+            for k in keys:
+                posting = self.postings.get(k)
+                if posting is not None:
+                    out |= posting
+                    fetches += 1
         t2 = time.perf_counter_ns()
         if stats is not None:
             stats.subpath_keys += len(keys)
@@ -111,7 +117,8 @@ class PEOnlineIndex(ScopeIndex):
         return out
 
     # ------------------------------------------------------------------ DSM
-    def move(self, src: P.Path | str, new_parent: P.Path | str) -> None:
+    def move(self, src: P.Path | str, new_parent: P.Path | str,
+             stats: Optional[DSMStats] = None) -> None:
         src = P.parse(src)
         new_parent = P.parse(new_parent)
         if not src:
@@ -128,13 +135,22 @@ class PEOnlineIndex(ScopeIndex):
         for old in old_keys:
             new = P.replace_prefix(old, src, dst)
             if old in self.postings:
-                self.postings[new] = self.postings.pop(old)
+                posting = self.postings[new] = self.postings.pop(old)
+                if stats is not None:
+                    stats.postings_touched += 1
+                    stats.ids_rewritten += len(posting)
             for ref in self.refs.pop(old, []):
                 ref.path = new          # shared refs: all bound entries follow
                 self.refs.setdefault(new, []).append(ref)
-        self._bump_epoch()
+        with self._agg_latch:
+            self._bump_epoch()
+        if stats is not None:
+            stats.ops += 1
+            stats.keys_rekeyed += len(old_keys)
+            stats.epochs_bumped += 1
 
-    def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
+    def merge(self, src: P.Path | str, dst: P.Path | str,
+              stats: Optional[DSMStats] = None) -> None:
         src = P.parse(src)
         dst = P.parse(dst)
         if not src or not dst:
@@ -151,11 +167,15 @@ class PEOnlineIndex(ScopeIndex):
             # posting merge (union on conflict)
             posting = self.postings.pop(old, None)
             if posting is not None:
+                if stats is not None:
+                    stats.postings_touched += 1
+                    stats.ids_rewritten += len(posting)
                 tgt = self.postings.get(new)
                 if tgt is None:
                     self.postings[new] = posting
                 else:
-                    tgt |= posting
+                    with self._agg_latch:
+                        tgt |= posting
             # ref redirect: entries bound to the old key follow to the new
             # key; conflicting keys simply hold multiple aliased refs.
             for ref in self.refs.pop(old, []):
@@ -163,7 +183,43 @@ class PEOnlineIndex(ScopeIndex):
                 self.refs.setdefault(new, []).append(ref)
         # aux re-key (union children maps on conflicts)
         self.aux.rekey_subtree(src, dst)
-        self._bump_epoch()
+        with self._agg_latch:
+            self._bump_epoch()
+        if stats is not None:
+            stats.ops += 1
+            stats.keys_rekeyed += len(src_keys)
+            stats.epochs_bumped += 1
+
+    def remove(self, path: P.Path | str,
+               stats: Optional[DSMStats] = None) -> RoaringBitmap:
+        """Recursive subtree removal: enumerate and drop every subtree key's
+        posting (O(m_u) keys, each entry re-filed out exactly once)."""
+        p = P.parse(path)
+        if not p:
+            raise ValueError("cannot remove root")
+        if p not in self.aux:
+            raise KeyError(P.to_str(p))
+        removed = RoaringBitmap()
+        keys = self.aux.remove_subtree(p)
+        with self._agg_latch:
+            for key in keys:
+                posting = self.postings.pop(key, None)
+                if posting is not None:
+                    removed |= posting
+                    if stats is not None:
+                        stats.postings_touched += 1
+                        stats.ids_rewritten += len(posting)
+                self.refs.pop(key, None)
+        for eid in removed.to_array():
+            self.catalog.unbind(int(eid))
+        with self._agg_latch:
+            self._bump_epoch()
+        if stats is not None:
+            stats.ops += 1
+            stats.dirs_removed += len(keys)
+            stats.entries_unbound += len(removed)
+            stats.epochs_bumped += 1
+        return removed
 
     # ------------------------------------------------------------ inspection
     def has_dir(self, path: P.Path | str) -> bool:

@@ -21,7 +21,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 from . import paths as P
 from .idset import RoaringBitmap
-from .interface import ResolveStats, ScopeIndex
+from .interface import DSMDelta, DSMStats, ResolveStats, ScopeIndex
 
 
 class TrieNode:
@@ -106,15 +106,16 @@ class TrieHIIndex(ScopeIndex):
     def insert(self, entry_id: int, dir_path: P.Path | str) -> None:
         node = self._walk(P.parse(dir_path), create=True)
         assert node is not None
-        node.local.add(entry_id)
-        # O(t) aggregate updates up the ancestor chain (ingestion, Table II)
-        cur: Optional[TrieNode] = node
-        while cur is not None:
-            cur.inclusive.add(entry_id)
-            cur.epoch += 1
-            cur = cur.parent
+        with self._agg_latch:
+            node.local.add(entry_id)
+            # O(t) aggregate updates up the ancestor chain (Table II)
+            cur: Optional[TrieNode] = node
+            while cur is not None:
+                cur.inclusive.add(entry_id)
+                cur.epoch += 1
+                cur = cur.parent
+            self._bump_epoch()
         self.catalog.bind(entry_id, node)
-        self._bump_epoch()
 
     def bulk_insert(self, entry_ids, dir_paths) -> None:
         import numpy as np
@@ -124,28 +125,31 @@ class TrieHIIndex(ScopeIndex):
         for path, ids in groups.items():
             node = self._walk(path, create=True)
             arr = np.asarray(ids, np.uint32)
-            node.local.add_many(arr)
-            cur = node
-            while cur is not None:
-                cur.inclusive.add_many(arr)
-                cur.epoch += 1
-                cur = cur.parent
+            with self._agg_latch:
+                node.local.add_many(arr)
+                cur = node
+                while cur is not None:
+                    cur.inclusive.add_many(arr)
+                    cur.epoch += 1
+                    cur = cur.parent
             self.catalog.bind_many(ids, node)
-        self._bump_epoch()
+        with self._agg_latch:
+            self._bump_epoch()
 
     def delete(self, entry_id: int) -> None:
         ref = self.catalog.get(entry_id)
         if ref is None:
             raise KeyError(entry_id)
         node = ref.resolve_forward()
-        node.local.remove(entry_id)
-        cur: Optional[TrieNode] = node
-        while cur is not None:
-            cur.inclusive.remove(entry_id)
-            cur.epoch += 1
-            cur = cur.parent
+        with self._agg_latch:
+            node.local.remove(entry_id)
+            cur: Optional[TrieNode] = node
+            while cur is not None:
+                cur.inclusive.remove(entry_id)
+                cur.epoch += 1
+                cur = cur.parent
+            self._bump_epoch()
         self.catalog.unbind(entry_id)
-        self._bump_epoch()
 
     # ----------------------------------------------------------------- read
     def resolve(self, path: P.Path | str, recursive: bool = True,
@@ -158,7 +162,8 @@ class TrieHIIndex(ScopeIndex):
         if node is None:
             return RoaringBitmap()
         if recursive:
-            out = node.inclusive.copy()
+            with self._agg_latch:    # vs in-place DSM/ingest container writes
+                out = node.inclusive.copy()
             t2 = time.perf_counter_ns()
             if stats is not None:
                 stats.posting_fetches += 1
@@ -167,10 +172,11 @@ class TrieHIIndex(ScopeIndex):
             return out
         # non-recursive: Inc(p) \ union(Inc(children)) (paper-faithful; equals
         # Local(p) by Eq. 1 — asserted in check_invariants)
-        children = RoaringBitmap()
-        for child in node.children.values():
-            children |= child.inclusive
-        out = node.inclusive - children
+        with self._agg_latch:
+            children = RoaringBitmap()
+            for child in node.children.values():
+                children |= child.inclusive
+            out = node.inclusive - children
         t2 = time.perf_counter_ns()
         if stats is not None:
             stats.posting_fetches += 1 + len(node.children)
@@ -243,7 +249,8 @@ class TrieHIIndex(ScopeIndex):
             bi -= 1
         return a[:ai], b[:bi]
 
-    def move(self, src: P.Path | str, new_parent: P.Path | str) -> None:
+    def move(self, src: P.Path | str, new_parent: P.Path | str,
+             stats: Optional[DSMStats] = None) -> None:
         src_p = P.parse(src)
         np_p = P.parse(new_parent)
         if not src_p:
@@ -262,21 +269,41 @@ class TrieHIIndex(ScopeIndex):
         old_chain = self._ancestor_chain(s)              # proper ancestors of s
         new_chain = [dest] + self._ancestor_chain(dest)  # dest + its ancestors
         old_only, new_only = self._split_chains(old_chain, new_chain)
-        for anc in old_only:
-            anc.inclusive -= agg
-            anc.epoch += 1
-        for anc in new_only:
-            anc.inclusive |= agg
-            anc.epoch += 1
+        rem_ev = add_ev = ()
+        delta_copy = None
+        with self._agg_latch:
+            for anc in old_only:
+                anc.inclusive -= agg
+                anc.epoch += 1
+            for anc in new_only:
+                anc.inclusive |= agg
+                anc.epoch += 1
+            self._bump_epoch()
+            if self._dsm_listeners:
+                # epoch pairs + delta snapshot captured inside the latch: a
+                # concurrent op's bump or ingest can never be folded into
+                # this event
+                rem_ev = tuple((a, a.epoch - 1, a.epoch) for a in old_only)
+                add_ev = tuple((a, a.epoch - 1, a.epoch) for a in new_only)
+                delta_copy = agg.copy()
         # relink: one child-map delete, one insert, one parent pointer update.
         # Independent of the number of descendant directories.
         assert s.parent is not None
         del s.parent.children[s.segment]
         dest.children[s.segment] = s
         s.parent = dest
-        self._bump_epoch()
+        if stats is not None:
+            stats.ops += 1
+            stats.nodes_relinked += 1
+            stats.postings_touched += len(old_only) + len(new_only)
+            stats.agg_bits_updated += len(agg) * (len(old_only) + len(new_only))
+            stats.epochs_bumped += len(old_only) + len(new_only) + 1
+        if delta_copy is not None:
+            self._emit_dsm(DSMDelta(kind="move", delta=delta_copy,
+                                    removed_from=rem_ev, added_to=add_ev))
 
-    def merge(self, src: P.Path | str, dst: P.Path | str) -> None:
+    def merge(self, src: P.Path | str, dst: P.Path | str,
+              stats: Optional[DSMStats] = None) -> None:
         src_p, dst_p = P.parse(src), P.parse(dst)
         if not src_p or not dst_p:
             raise ValueError("cannot merge the root directory")
@@ -288,43 +315,124 @@ class TrieHIIndex(ScopeIndex):
             raise KeyError(P.to_str(dst_p))
         P.validate_disjoint(src_p, dst_p)
         agg = s.inclusive
+        delta = None
         # ancestor aggregates: S leaves old-only proper ancestors of s, enters
         # d and new-only proper ancestors of d; common ancestors unchanged.
         old_chain = self._ancestor_chain(s)
         new_chain = [d] + self._ancestor_chain(d)
         old_only, new_only = self._split_chains(old_chain, new_chain)
-        for anc in old_only:
-            anc.inclusive -= agg
-            anc.epoch += 1
-        for anc in new_only:
-            anc.inclusive |= agg
-            anc.epoch += 1
-        # detach s, then reconcile topology below s and d
+        rem_ev = add_ev = ()
+        with self._agg_latch:
+            for anc in old_only:
+                anc.inclusive -= agg
+                anc.epoch += 1
+            for anc in new_only:
+                anc.inclusive |= agg
+                anc.epoch += 1
+            self._bump_epoch()
+            if self._dsm_listeners:
+                rem_ev = tuple((a, a.epoch - 1, a.epoch) for a in old_only)
+                add_ev = tuple((a, a.epoch - 1, a.epoch) for a in new_only)
+                delta = agg.copy()
+        if stats is not None:
+            stats.ops += 1
+            stats.postings_touched += len(old_only) + len(new_only)
+            stats.agg_bits_updated += len(agg) * (len(old_only) + len(new_only))
+            stats.epochs_bumped += len(old_only) + len(new_only) + 1
+        # detach s, then reconcile topology below s and d (conflict unions
+        # write shared containers -> latched against concurrent readers)
         assert s.parent is not None
         del s.parent.children[s.segment]
-        self._reconcile(s, d)
-        self._bump_epoch()
+        with self._agg_latch:
+            self._reconcile(s, d, stats)
+        if delta is not None:
+            # d's own epoch moves again during reconciliation (local union),
+            # past the new_epoch this event recorded for it — a cached scope
+            # at d is patched to that recorded epoch and then self-evicts on
+            # the next lookup rather than validating against a half-seen
+            # state. The pure ancestor entries patch and stay valid.
+            self._emit_dsm(DSMDelta(kind="merge", delta=delta,
+                                    removed_from=rem_ev, added_to=add_ev))
 
-    def _reconcile(self, a: TrieNode, b: TrieNode) -> None:
+    def _reconcile(self, a: TrieNode, b: TrieNode,
+                   stats: Optional[DSMStats] = None) -> None:
         """Dissolve node ``a`` into node ``b``. Aggregates above b already
         account for Inc(a); b.inclusive includes Inc(a) as well. Work is
         node-level: non-conflicting children relink as whole units (r counts
         only the conflicting nodes visited)."""
         b.local |= a.local
         b.epoch += 1
+        if stats is not None:
+            stats.nodes_dissolved += 1
+            stats.postings_touched += 1
+            stats.ids_rewritten += len(a.local)
+            stats.epochs_bumped += 1
         for name, ca in list(a.children.items()):
             cb = b.children.get(name)
             if cb is None:
                 # relink whole subtree as a unit: O(1) topology update
                 b.children[name] = ca
                 ca.parent = b
+                if stats is not None:
+                    stats.nodes_relinked += 1
             else:
                 cb.inclusive |= ca.inclusive
-                self._reconcile(ca, cb)
+                if stats is not None:
+                    stats.postings_touched += 1
+                    stats.agg_bits_updated += len(ca.inclusive)
+                self._reconcile(ca, cb, stats)
         a.children.clear()
         a.forward = b           # catalog forwarding for entries bound to a
         a.parent = None
         self._n_dirs -= 1
+
+    def remove(self, path: P.Path | str,
+               stats: Optional[DSMStats] = None) -> RoaringBitmap:
+        """Recursive subtree removal: one detach, O(t) ancestor-chain
+        aggregate updates, catalog unbinds for the removed entries — the
+        subtree's own nodes are dropped wholesale, never visited per entry."""
+        p = P.parse(path)
+        if not p:
+            raise ValueError("cannot remove root")
+        node = self._walk(p, create=False)
+        if node is None:
+            raise KeyError(P.to_str(p))
+        chain = self._ancestor_chain(node)
+        rem_ev = ()
+        with self._agg_latch:
+            removed = node.inclusive.copy()
+            for anc in chain:
+                anc.inclusive -= removed
+                anc.epoch += 1
+            self._bump_epoch()
+            if self._dsm_listeners:
+                rem_ev = tuple((a, a.epoch - 1, a.epoch) for a in chain)
+        assert node.parent is not None
+        del node.parent.children[node.segment]
+        node.parent = None
+        n_dropped = sum(1 for _ in self._iter_subtree(node))
+        self._n_dirs -= n_dropped
+        for eid in removed.to_array():
+            self.catalog.unbind(int(eid))
+        if stats is not None:
+            stats.ops += 1
+            stats.postings_touched += len(chain)
+            stats.agg_bits_updated += len(removed) * len(chain)
+            stats.dirs_removed += n_dropped
+            stats.entries_unbound += len(removed)
+            stats.epochs_bumped += len(chain) + 1
+        if self._dsm_listeners:
+            self._emit_dsm(DSMDelta(kind="remove", delta=removed.copy(),
+                                    removed_from=rem_ev))
+        return removed
+
+    @staticmethod
+    def _iter_subtree(node: TrieNode) -> Iterator[TrieNode]:
+        stack = [node]
+        while stack:
+            cur = stack.pop()
+            yield cur
+            stack.extend(cur.children.values())
 
     def resolve_pattern(self, pattern: P.Path | str, recursive: bool = True,
                         stats: Optional[ResolveStats] = None) -> RoaringBitmap:
@@ -350,13 +458,14 @@ class TrieHIIndex(ScopeIndex):
         if stats is not None:
             stats.node_visits += visits
         out = RoaringBitmap()
-        for node in frontier:
-            if recursive:
-                out |= node.inclusive
-            else:
-                children = RoaringBitmap.union_many(
-                    c.inclusive for c in node.children.values())
-                out |= node.inclusive - children
+        with self._agg_latch:
+            for node in frontier:
+                if recursive:
+                    out |= node.inclusive
+                else:
+                    children = RoaringBitmap.union_many(
+                        c.inclusive for c in node.children.values())
+                    out |= node.inclusive - children
         return out
 
     # ------------------------------------------------------------ inspection

@@ -33,6 +33,47 @@ def _kernel(a_ref, b_ref, words_ref, count_ref, acc_ref):
         count_ref[...] = acc_ref[...]
 
 
+def _patch_kernel(m_ref, d_ref, op_ref, out_ref):
+    m = m_ref[...]                       # (rows, block) uint32
+    d = d_ref[...]                       # (1, block) uint32, broadcast
+    op = op_ref[...]                     # (rows, 1) int32
+    out_ref[...] = jnp.where(op > 0, m | d,
+                             jnp.where(op < 0, m & ~d, m))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bitmap_patch(masks: jax.Array, delta: jax.Array, ops: jax.Array,
+                 block: int = 2048, interpret: bool = True) -> jax.Array:
+    """Patch a batch of packed uint32 masks with one delta row in a single
+    launch: row i becomes ``masks[i] | delta`` where ``ops[i] > 0``,
+    ``masks[i] & ~delta`` where ``ops[i] < 0``, unchanged where 0.
+
+    The DSM delta-maintenance primitive: after a MOVE/MERGE/REMOVE relocates
+    aggregate S, every surviving cached scope mask on the vacated chain is
+    AND-NOT-patched and every mask on the gaining chain OR-patched — word-wise
+    on packed words, 32x less traffic than dense bool masks, instead of
+    re-resolving the scopes from scratch.
+
+    masks: (rows, n_words) uint32; delta: (1, n_words) uint32;
+    ops: (rows, 1) int32. n_words % block == 0 (ops.py pads with zero words —
+    OR/AND-NOT neutral).
+    """
+    rows, n = masks.shape
+    assert n % block == 0
+    return pl.pallas_call(
+        _patch_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((rows, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((rows, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
+        interpret=interpret,
+    )(masks, delta, ops)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def mask_and_popcount(a: jax.Array, b: jax.Array, block: int = 2048,
                       interpret: bool = True) -> Tuple[jax.Array, jax.Array]:

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from .bitmap_ops import bitmap_patch as _bitmap_patch
 from .bitmap_ops import mask_and_popcount as _mask_and_popcount
 from .flash_decode import flash_decode as _flash_decode
 from .scoped_topk import ivf_gather_topk as _ivf_gather_topk
@@ -100,6 +101,25 @@ def ivf_gather_topk(queries, cand_rows, cand_ids, qwords, k: int = 10,
     return vals, ids
 
 
+def bitmap_patch(masks, delta, op_signs, block: int = 2048,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Batched packed-mask patch: rows with op +1 get ``| delta``, -1 get
+    ``& ~delta``, 0 pass through. Pads the word axis to a block multiple
+    (zero words are OR/AND-NOT neutral), unpads the result."""
+    interpret = _INTERPRET if interpret is None else interpret
+    masks = jnp.atleast_2d(jnp.asarray(masks, dtype=jnp.uint32))
+    delta = jnp.asarray(delta, dtype=jnp.uint32).reshape(1, -1)
+    ops_col = jnp.asarray(op_signs, dtype=jnp.int32).reshape(-1, 1)
+    if delta.shape[1] != masks.shape[1]:
+        raise ValueError(f"delta has {delta.shape[1]} words for "
+                         f"{masks.shape[1]}-word masks")
+    block = min(block, max(8, masks.shape[1]))
+    mp, n = _pad_to(masks, 1, block)
+    dp, _ = _pad_to(delta, 1, block)
+    out = _bitmap_patch(mp, dp, ops_col, block=block, interpret=interpret)
+    return out[:, :n]
+
+
 def mask_and_popcount(a, b, block: int = 2048,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
@@ -130,4 +150,4 @@ def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
 
 
 __all__ = ["scoped_topk", "multi_scope_topk", "ivf_gather_topk",
-           "mask_and_popcount", "flash_decode", "ref"]
+           "mask_and_popcount", "bitmap_patch", "flash_decode", "ref"]

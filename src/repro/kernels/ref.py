@@ -91,6 +91,26 @@ def mask_and_popcount_ref(a: jax.Array, b: jax.Array
     return words, count
 
 
+def bitmap_patch_ref(masks: jax.Array, delta: jax.Array,
+                     ops: jax.Array) -> jax.Array:
+    """jnp twin of the batched mask-patch kernel: per-row OR (+1) / AND-NOT
+    (-1) / passthrough (0) of one shared delta row."""
+    d = delta.reshape(1, -1)
+    op = ops.reshape(-1, 1)
+    return jnp.where(op > 0, masks | d, jnp.where(op < 0, masks & ~d, masks))
+
+
+def bitmap_patch_np(masks: np.ndarray, delta: np.ndarray,
+                    ops: np.ndarray) -> np.ndarray:
+    """Numpy oracle for ``bitmap_patch`` (the mask-cache host fast path)."""
+    out = np.array(masks, dtype=np.uint32, copy=True)
+    ops = np.asarray(ops).reshape(-1)
+    delta = np.asarray(delta, dtype=np.uint32).reshape(-1)
+    out[ops > 0] |= delta
+    out[ops < 0] &= ~delta
+    return out
+
+
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      length_mask: jax.Array) -> jax.Array:
     """Plain GQA attention for one query token (no flash blocking)."""

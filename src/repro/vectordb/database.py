@@ -14,8 +14,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import (DSM, DSMExecutor, DSMJournal, ResolveStats, ScopeIndex,
-                    make_scope_index)
+from ..core import (DSM, DSMBatchResult, DSMExecutor, DSMJournal, DSMStats,
+                    ResolveStats, ScopeIndex, make_scope_index)
 from ..core.interface import normalize_batch
 from .flat import FlatExecutor
 from .graph import PGIndex
@@ -47,6 +47,11 @@ class DirectoryVectorDB:
     def __init__(self, dim: int, metric: str = "ip",
                  scope_strategy: str = "triehi",
                  journal_path: Optional[str] = None):
+        """``journal_path`` makes every namespace's DSM executor journal to
+        ``{journal_path}.{namespace}``. Reopening an existing journal
+        continues its sequence numbers from the persisted tail; after the
+        caller restores index state on restart, :meth:`recover` replays any
+        op whose COMMIT was lost to a crash."""
         self.store = VectorStore(dim, metric)
         self.scope_strategy = scope_strategy
         self.namespaces: Dict[str, ScopeIndex] = {}
@@ -96,6 +101,9 @@ class DirectoryVectorDB:
         ivf = self.executors.get("ivf")
         if ivf is not None:
             ivf.add(ids)
+        pg = self.executors.get("pg")
+        if pg is not None:
+            pg.add(ids)
         return ids
 
     def delete(self, entry_id: int) -> None:
@@ -134,9 +142,13 @@ class DirectoryVectorDB:
                          resolve_stats=stats)
 
     def planner(self, namespace: str = DEFAULT_NS) -> BatchPlanner:
-        """Per-namespace batch planner (owns the epoch-validated mask cache)."""
+        """Per-namespace batch planner (owns the epoch-validated mask cache,
+        subscribed to the namespace's DSM delta stream so surviving masks
+        are patched in place instead of evicted)."""
         if namespace not in self._planners:
-            self._planners[namespace] = BatchPlanner(cache=ScopeMaskCache())
+            cache = ScopeMaskCache()
+            self.namespace(namespace).subscribe_dsm(cache.apply_delta)
+            self._planners[namespace] = BatchPlanner(cache=cache)
         return self._planners[namespace]
 
     def dsq_batch(self, queries: np.ndarray, paths: Sequence[str],
@@ -361,15 +373,79 @@ class DirectoryVectorDB:
         return out
 
     # ------------------------------------------------------------------ DSM
-    def move(self, src: str, new_parent: str,
-             namespace: str = DEFAULT_NS) -> None:
-        self._dsm[namespace].apply(DSM("move", src, new_parent))
+    def move(self, src: str, new_parent: str, namespace: str = DEFAULT_NS,
+             stats: Optional[DSMStats] = None) -> None:
+        self._dsm[namespace].apply(DSM("move", src, new_parent), stats=stats)
 
-    def merge(self, src: str, dst: str, namespace: str = DEFAULT_NS) -> None:
-        self._dsm[namespace].apply(DSM("merge", src, dst))
+    def merge(self, src: str, dst: str, namespace: str = DEFAULT_NS,
+              stats: Optional[DSMStats] = None) -> None:
+        self._dsm[namespace].apply(DSM("merge", src, dst), stats=stats)
 
     def mkdir(self, path: str, namespace: str = DEFAULT_NS) -> None:
         self._dsm[namespace].apply(DSM("mkdir", path))
+
+    def rmdir(self, path: str, namespace: str = DEFAULT_NS,
+              stats: Optional[DSMStats] = None) -> np.ndarray:
+        """Recursively remove subtree ``path``: drop its directories and
+        postings in ``namespace`` (journaled + region-locked), delete the
+        removed entries from every other namespace, and tombstone their
+        store rows so no executor can surface them again. Returns the
+        removed entry ids."""
+        removed = self._dsm[namespace].apply(DSM("remove", path), stats=stats)
+        ids = removed.to_array() if removed is not None else np.empty(0, np.uint32)
+        self._purge_entries(ids, exclude_ns=namespace)
+        return ids
+
+    def _purge_entries(self, ids: np.ndarray, exclude_ns: str) -> None:
+        for name, idx in self.namespaces.items():
+            if name == exclude_ns:
+                continue
+            for eid in ids:
+                if idx.catalog.get(int(eid)) is not None:
+                    idx.delete(int(eid))
+        self.store.mark_deleted(ids)
+
+    def dsm_batch(self, ops: Sequence[DSM | Tuple[str, ...]],
+                  namespace: str = DEFAULT_NS,
+                  stats: Optional[DSMStats] = None,
+                  max_workers: int = 4) -> DSMBatchResult:
+        """Group-committed batched maintenance: one journal BEGIN append for
+        the whole batch, FIFO region-lock scheduling (disjoint subtrees
+        apply concurrently, overlapping ones serialize in submission order),
+        one shared COMMIT record. Ops may be :class:`DSM` instances or
+        ``(kind, src[, dst])`` tuples. Ops the index rejects surface in
+        ``result.errors`` rather than aborting the batch; REMOVE ops
+        additionally purge their entries from the other namespaces and
+        tombstone the store rows, exactly like :meth:`rmdir`."""
+        norm = [op if isinstance(op, DSM) else DSM(*op) for op in ops]
+        result = self._dsm[namespace].apply_many(norm, stats=stats,
+                                                 max_workers=max_workers)
+        for op, removed in zip(norm, result.results):
+            if op.kind == "remove" and removed is not None:
+                self._purge_entries(removed.to_array(), exclude_ns=namespace)
+        return result
+
+    def recover(self, namespace: Optional[str] = None
+                ) -> Dict[str, List[DSM]]:
+        """Replay uncommitted journal ops (crash suspects) for one or every
+        namespace. Call after restoring index state on restart; replay is
+        idempotent (ops the crash already applied are detected and only
+        re-committed) and ends with a ``check_invariants`` pass. A replayed
+        REMOVE finishes its :meth:`rmdir` contract — cross-namespace purge +
+        store tombstones. Returns the ops that actually replayed, per
+        namespace."""
+        names = [namespace] if namespace is not None else list(self._dsm)
+        out: Dict[str, List[DSM]] = {}
+        for name in names:
+            replayed_ops = []
+            for op, replayed, result in self._dsm[name].recover():
+                if not replayed:
+                    continue
+                replayed_ops.append(op)
+                if op.kind == "remove" and result is not None:
+                    self._purge_entries(result.to_array(), exclude_ns=name)
+            out[name] = replayed_ops
+        return out
 
     # ------------------------------------------------------------ inspection
     def stats(self) -> Dict[str, object]:

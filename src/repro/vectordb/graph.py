@@ -53,6 +53,7 @@ class PGIndex:
 
     def _build(self) -> None:
         n = len(self.store)
+        self._n_nodes = n
         if n == 0:
             return
         order = self._rng.permutation(n)
@@ -68,6 +69,46 @@ class PGIndex:
                 self._connect(idx, int(nb))
                 self._connect(int(nb), idx)
             inserted.append(idx)
+
+    # ------------------------------------------------------ incremental add
+    def _grow(self, n: int) -> None:
+        if n <= self.neighbors.shape[0]:
+            return
+        old = self.neighbors.shape[0]
+        cap = max(n, 2 * old, 8)
+        neighbors = np.full((cap, self.max_degree), -1, dtype=np.int32)
+        neighbors[:old] = self.neighbors
+        self.neighbors = neighbors
+        n_edges = np.zeros(cap, dtype=np.int32)
+        n_edges[:old] = self._n_edges
+        self._n_edges = n_edges
+        visit_gen = np.zeros(cap, dtype=np.int64)
+        visit_gen[:old] = self._visit_gen
+        self._visit_gen = visit_gen
+
+    def add(self, ids: np.ndarray) -> None:
+        """Incrementally link freshly-added store rows into the graph: beam
+        search from the fixed entry point collects each new node's nearest
+        linked neighbors, then connects both ways under ``max_degree``
+        pruning (the same rule the bulk build applies). Without this, rows
+        ingested after ``build_ann("pg")`` exist in the store but are
+        unreachable through the graph."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if len(ids) == 0:
+            return
+        self._grow(len(self.store))
+        for idx in ids:
+            idx = int(idx)
+            if self._n_nodes == 0:
+                self._entry = idx       # first node seeds the graph
+                self._n_nodes = 1
+                continue
+            cand, _ = self._beam(self.store.vectors[idx], entry=self._entry,
+                                 ef=self.ef_construction)
+            for nb in cand[: self.max_degree]:
+                self._connect(idx, int(nb))
+                self._connect(int(nb), idx)
+            self._n_nodes += 1
 
     def _connect(self, a: int, b: int) -> None:
         if a == b:

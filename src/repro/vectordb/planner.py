@@ -21,6 +21,7 @@ scope is one launch over its candidate rows.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -29,7 +30,7 @@ import numpy as np
 
 from ..core import ResolveStats, RoaringBitmap, ScopeIndex
 from ..core import paths as P
-from ..core.interface import ScopeSpec
+from ..core.interface import DSMDelta, ScopeSpec
 from .flat import GATHER_THRESHOLD
 
 
@@ -87,15 +88,33 @@ class ScopeMaskCache:
 
     Correctness contract: an entry is served only while every constituent
     ``scope_token`` compares equal to the one captured at resolve time and
-    the store size is unchanged. Any DSM (move/merge) or write that touches a
-    constituent scope bumps its epoch and the entry silently misses."""
+    the store size is unchanged. Any DSM (move/merge/remove) or write that
+    touches a constituent scope bumps its epoch and the entry silently
+    misses.
 
-    def __init__(self, max_entries: int = 4096):
+    Delta maintenance: subscribed to a TrieHI index (:meth:`apply_delta` as
+    a ``DSMDelta`` listener), the cache *patches* surviving entries instead
+    of letting the whole ancestor chain evict. A MOVE of aggregate S bumps
+    every node on the vacated and gaining chains — under token validation
+    alone, one small move kills the cached mask of every enclosing scope
+    (including the always-hot root). The delta event names exactly those
+    nodes with their new epochs, so each simple cached scope on the chain is
+    patched word-wise (OR the gaining chain, AND-NOT the vacated chain — the
+    batched ``bitmap_patch`` kernel / its numpy oracle) and its token
+    advanced to the patched state; correctness stays epoch-validated.
+    Entries whose change is not exactly S (exclusion composites,
+    non-recursive scopes, merge-conflict children) are evicted instead."""
+
+    def __init__(self, max_entries: int = 4096, use_pallas: bool = False):
         self.max_entries = max_entries
+        self.use_pallas = use_pallas
         self._entries: Dict[ScopeKey, CachedScope] = {}
+        self._lock = threading.Lock()    # serving thread vs DSM delta threads
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.patched = 0
+        self.delta_evictions = 0
 
     @staticmethod
     def _tokens(index: ScopeIndex, key: ScopeKey) -> Optional[Tuple]:
@@ -107,32 +126,121 @@ class ScopeMaskCache:
 
     def lookup(self, index: ScopeIndex, key: ScopeKey,
                n: int) -> Optional[CachedScope]:
-        ent = self._entries.get(key)
-        if ent is None:
-            self.misses += 1
-            return None
-        if ent.n != n or self._tokens(index, key) != ent.tokens:
-            del self._entries[key]
-            self.invalidations += 1
-            self.misses += 1
-            return None
-        self.hits += 1
-        self._entries[key] = self._entries.pop(key)   # LRU: refresh recency
-        return ent
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            if ent.n != n or self._tokens(index, key) != ent.tokens:
+                del self._entries[key]
+                self.invalidations += 1
+                self.misses += 1
+                return None
+            self.hits += 1
+            self._entries[key] = self._entries.pop(key)  # LRU refresh
+            return ent
 
     def store(self, index: ScopeIndex, key: ScopeKey, n: int,
-              scope: RoaringBitmap) -> CachedScope:
-        ent = CachedScope(tokens=self._tokens(index, key) or (), n=n,
+              scope: RoaringBitmap,
+              tokens: Optional[Tuple] = None) -> CachedScope:
+        """Cache a freshly-resolved scope. ``tokens`` should be the token
+        snapshot captured *before* the resolution ran (the planner does
+        this); the entry is admitted only while the tokens still compare
+        equal at store time, so a DSM landing anywhere in the
+        capture→resolve→store window can never pin post-DSM tokens onto a
+        pre-DSM bitmap (the result is still returned, just not cached)."""
+        if tokens is None:
+            tokens = self._tokens(index, key)
+        ent = CachedScope(tokens=tokens or (), n=n,
                           scope_size=len(scope), scope=scope)
-        if ent.tokens:
-            if len(self._entries) >= self.max_entries:
-                self._entries.pop(next(iter(self._entries)))
-            self._entries[key] = ent
+        if ent.tokens and self._tokens(index, key) == ent.tokens:
+            with self._lock:
+                if len(self._entries) >= self.max_entries:
+                    self._entries.pop(next(iter(self._entries)))
+                self._entries[key] = ent
         return ent
+
+    # ------------------------------------------------------- delta patching
+    def apply_delta(self, event: DSMDelta) -> Dict[str, int]:
+        """DSMDelta listener: patch every simple cached scope anchored on an
+        affected chain node in place of evicting it. Patched entries are
+        *replaced* (copy-on-patch), so a concurrent reader that already
+        holds the old entry keeps a self-consistent snapshot. A patch is
+        taken only when the stored epoch equals the event's pre-op epoch:
+        an entry already stale for any other reason (an un-evented bump,
+        e.g. a point delete, or a concurrent op's event not yet applied)
+        must evict — re-stamping it would resurrect a stale mask as valid."""
+        removed = {id(n): (old, new) for n, old, new in event.removed_from}
+        added = {id(n): (old, new) for n, old, new in event.added_to}
+        if not removed and not added:
+            return {"patched": 0, "evicted": 0}
+        with self._lock:
+            patch: List[Tuple[ScopeKey, CachedScope, int, int]] = []
+            evict: List[ScopeKey] = []
+            for key, ent in self._entries.items():
+                hit = [t for t in ent.tokens
+                       if (id(t[0]) in removed or id(t[0]) in added)]
+                if not hit:
+                    continue         # off-chain entry: survives untouched
+                if len(ent.tokens) == 1 and not key.exclude and key.recursive:
+                    node, cur_epoch = ent.tokens[0]
+                    sign = 1 if id(node) in added else -1
+                    old_e, new_e = (added[id(node)] if sign > 0
+                                    else removed[id(node)])
+                    if cur_epoch == old_e:
+                        patch.append((key, ent, sign, new_e))
+                    else:
+                        evict.append(key)
+                else:
+                    # the delta composes non-trivially (exclusion branches,
+                    # Local-level scopes): fall back to eviction
+                    evict.append(key)
+            for key in evict:
+                del self._entries[key]
+                self.invalidations += 1
+            groups: Dict[int, List[Tuple[CachedScope, np.ndarray, int]]] = {}
+            for key, ent, sign, epoch in patch:
+                scope = (ent.scope | event.delta if sign > 0
+                         else ent.scope - event.delta)
+                repl = CachedScope(tokens=((ent.tokens[0][0], epoch),),
+                                   n=ent.n, scope_size=len(scope), scope=scope)
+                if ent._words is not None:
+                    groups.setdefault(ent._words.shape[0], []).append(
+                        (repl, ent._words, sign))
+                self._entries[key] = repl
+            # one batched word-wise patch launch per distinct word length
+            for n_words, rows in groups.items():
+                masks = np.stack([w for _, w, _ in rows])
+                signs = np.asarray([s for _, _, s in rows], dtype=np.int32)
+                delta_words = event.delta.to_words(n_words * 32)
+                if self.use_pallas:
+                    from ..kernels import ops as kops
+                    out = np.asarray(
+                        kops.bitmap_patch(masks, delta_words, signs))
+                else:
+                    from ..kernels.ref import bitmap_patch_np
+                    out = bitmap_patch_np(masks, delta_words, signs)
+                for row, (repl, _, _) in zip(out, rows):
+                    repl._words = np.ascontiguousarray(row, dtype=np.uint32)
+            self.patched += len(patch)
+            self.delta_evictions += len(evict)
+            return {"patched": len(patch), "evicted": len(evict)}
+
+    def revalidate(self, index: ScopeIndex, n: int) -> Tuple[int, int]:
+        """(still-valid, total) over the resident entries, without evicting —
+        the cache-survival metric of the DSM benchmarks."""
+        with self._lock:
+            total = len(self._entries)
+            valid = sum(1 for key, ent in self._entries.items()
+                        if ent.n == n
+                        and self._tokens(index, key) == ent.tokens)
+        return valid, total
 
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses, "invalidations": self.invalidations}
+                "misses": self.misses, "invalidations": self.invalidations,
+                "patched": self.patched,
+                "delta_evictions": self.delta_evictions}
 
 
 @dataclass
@@ -210,22 +318,25 @@ class BatchPlanner:
         acct.unique_scopes += len(order)
 
         resolved: Dict[ScopeKey, CachedScope] = {}
-        misses: List[ScopeKey] = []
+        misses: List[Tuple[ScopeKey, Optional[Tuple]]] = []
         for key in order:
             ent = self.cache.lookup(index, key, n)
             if ent is not None:
                 resolved[key] = ent
                 acct.scope_cache_hits += 1
             else:
-                misses.append(key)
+                # token snapshot BEFORE resolving: store() re-checks it so a
+                # DSM racing the resolution can never be cached over
+                misses.append((key, self.cache._tokens(index, key)))
         if misses:
             scopes = index.resolve_batch(
-                [key.path for key in misses],
-                recursive=[key.recursive for key in misses],
-                exclude=[key.exclude for key in misses],
+                [key.path for key, _ in misses],
+                recursive=[key.recursive for key, _ in misses],
+                exclude=[key.exclude for key, _ in misses],
                 stats=acct.resolve_stats)
-            for key, scope in zip(misses, scopes):
-                resolved[key] = self.cache.store(index, key, n, scope)
+            for (key, toks), scope in zip(misses, scopes):
+                resolved[key] = self.cache.store(index, key, n, scope,
+                                                 tokens=toks)
 
         groups: List[PlanGroup] = []
         for key, idxs in order.items():

@@ -170,6 +170,42 @@ def test_bitmap_popcount_property(n, seed):
     assert int(c1) == int(np.bitwise_count(a & b).sum())
 
 
+@pytest.mark.parametrize("rows,n_words", [
+    (1, 8), (4, 64), (7, 333), (16, 2048), (3, 4097),
+])
+def test_bitmap_patch_sweep(rows, n_words):
+    """Batched mask patch (the DSM delta-maintenance primitive): Pallas
+    kernel vs jnp twin vs numpy oracle, mixed OR/AND-NOT/noop rows."""
+    r = np.random.default_rng(rows * 1000 + n_words)
+    masks = r.integers(0, 2 ** 32, size=(rows, n_words), dtype=np.uint32)
+    delta = r.integers(0, 2 ** 32, size=n_words, dtype=np.uint32)
+    signs = r.integers(-1, 2, size=rows).astype(np.int32)
+    got = np.asarray(ops.bitmap_patch(masks, delta, signs))
+    twin = np.asarray(ref.bitmap_patch_ref(jnp.asarray(masks),
+                                           jnp.asarray(delta),
+                                           jnp.asarray(signs)))
+    oracle = ref.bitmap_patch_np(masks, delta, signs)
+    assert np.array_equal(got, oracle)
+    assert np.array_equal(twin, oracle)
+    # semantic spot checks: OR rows superset delta, AND-NOT rows disjoint
+    assert np.all((got[signs > 0] & delta) == delta)
+    assert not np.any(got[signs < 0] & delta)
+    assert np.array_equal(got[signs == 0], masks[signs == 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 3000), st.integers(0, 2 ** 32 - 1))
+def test_bitmap_patch_roundtrip_property(rows, n_words, seed):
+    """OR then AND-NOT of the same delta must clear every delta bit."""
+    r = np.random.default_rng(seed)
+    masks = r.integers(0, 2 ** 32, size=(rows, n_words), dtype=np.uint32)
+    delta = r.integers(0, 2 ** 32, size=n_words, dtype=np.uint32)
+    ones = np.ones(rows, dtype=np.int32)
+    ored = np.asarray(ops.bitmap_patch(masks, delta, ones))
+    cleared = np.asarray(ops.bitmap_patch(ored, delta, -ones))
+    assert np.array_equal(cleared, masks & ~delta)
+
+
 @pytest.mark.parametrize("b,h,kv,s,d,dtype", [
     (2, 8, 2, 1000, 64, np.float32),
     (1, 4, 4, 512, 128, np.float32),

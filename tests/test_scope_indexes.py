@@ -35,13 +35,16 @@ ops_st = st.lists(
         st.tuples(st.just("mkdir"), path_st),
         st.tuples(st.just("move"), path_st, path_st),
         st.tuples(st.just("merge"), path_st, path_st),
+        st.tuples(st.just("remove"), path_st),
     ),
     max_size=30)
 
 
 def apply_all(indexes, op):
-    """Apply op to every index; all must agree on success/failure."""
+    """Apply op to every index; all must agree on success/failure (and for
+    remove, on the removed entry-id set)."""
     results = []
+    removed_sets = []
     for idx in indexes:
         try:
             kind = op[0]
@@ -55,10 +58,13 @@ def apply_all(indexes, op):
                 idx.move(op[1], op[2])
             elif kind == "merge":
                 idx.merge(op[1], op[2])
+            elif kind == "remove":
+                removed_sets.append(set(idx.remove(op[1]).to_array().tolist()))
             results.append("ok")
         except (KeyError, ValueError) as e:
             results.append(type(e).__name__)
     assert len(set(results)) == 1, (op, results, "strategies disagree")
+    assert len(set(map(frozenset, removed_sets))) <= 1, (op, removed_sets)
 
 
 @settings(max_examples=60, deadline=None)
@@ -76,6 +82,10 @@ def test_strategies_agree_under_random_ops(ops, probe_paths):
             inserted[op[1]] = op[2]
         elif op[0] == "delete":
             inserted.pop(op[1], None)
+        elif op[0] == "remove":
+            # entries under the removed subtree are unbound everywhere
+            inserted = {eid: p for eid, p in inserted.items()
+                        if indexes[0].entry_dir(eid) is not None}
     for idx in indexes:
         idx.check_invariants()
     # all resolutions agree on every probe path, recursive + non-recursive
