@@ -1,0 +1,198 @@
+"""Sharded vs single-device ``dsq_batch`` on a forced 8-host-device mesh.
+
+The inner measurement runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the device count is
+locked at first jax init, so the harness process cannot force it itself).
+Eight simulated host devices share one CPU, so wall-clock speedup is
+*reported, never gated* — what this benchmark measures and (``--smoke``)
+enforces is the serving-tier contract:
+
+* bit-identical (scores, ids) to the single-device flat batch path, before
+  AND immediately after a ``dsm_batch`` of move/merge ops;
+* per-shard accounting: mask upload happens once (token-validated slots),
+  repeated batches hit resident slots, DSM deltas *patch* the shard-resident
+  words (patched bytes strictly below one full re-upload of the surviving
+  scopes), and the collective term stays O(shards * B * k);
+* incremental ingest growth scatters only the new rows (no re-shard).
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--scale S] \\
+        [--smoke] [--json out.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+SCALE = 0.01
+MARK = "BENCH_SHARDED_ROWS_JSON:"
+
+
+def run(scale: float = SCALE, smoke: bool = False) -> List[Dict]:
+    """Spawn the 8-device inner run and collect its rows (the harness
+    process keeps its 1-device jax state untouched)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "benchmarks.bench_sharded", "--inner",
+           "--scale", str(scale)] + (["--smoke"] if smoke else [])
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=str(Path(__file__).resolve().parents[1]),
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"bench_sharded inner failed:\n{out.stderr[-3000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith(MARK):
+            return json.loads(line[len(MARK):])
+    raise RuntimeError(f"no rows emitted:\n{out.stdout[-2000:]}")
+
+
+def _inner(scale: float, smoke: bool) -> List[Dict]:
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.vectordb import DirectoryVectorDB
+
+    from .common import DIM, datasets
+
+    assert len(jax.devices()) == 8, jax.devices()
+    B, K, REPEAT = 64, 10, 3
+    rng = np.random.default_rng(0)
+    rows: List[Dict] = []
+    for ds_name, ds in datasets(scale).items():
+        db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+        db.ingest(ds.vectors, ds.entry_paths)
+        # a contiguous-id subtree for the DSM patch measurement below: its
+        # delta occupies a narrow word range, so the word-range scatter is
+        # visibly smaller than a full row re-upload. /bench_src/ is sized
+        # past the gather threshold (scan plan) and used as a batch anchor,
+        # so its packed words are device-resident when the move vacates the
+        # fresh subtree from it.
+        extra = max(96, int(0.06 * len(db.store)))
+        db.ingest(rng.normal(size=(extra, DIM)).astype(np.float32),
+                  ["/bench_src/fresh/"] * extra)
+        db.build_ann("flat")
+        db.build_ann("sharded")
+        ex = db.executors["sharded"]
+        anchors = (list(dict.fromkeys(ds.query_anchors))[:6]
+                   + ["/bench_src/", "/"])
+        paths = [anchors[i % len(anchors)] for i in range(B)]
+        rec = [True if paths[i] == "/bench_src/" else bool(i % 3)
+               for i in range(B)]
+        queries = ds.queries[rng.integers(0, len(ds.queries), size=B)] \
+            .astype(np.float32)
+
+        def flat_batch():
+            return db.dsq_batch(queries, paths, k=K, recursive=rec,
+                                executor="flat")
+
+        def sharded_batch():
+            return db.dsq_batch(queries, paths, k=K, recursive=rec,
+                                executor="sharded")
+
+        # correctness gate: bit-identical to the single-device flat batch
+        rf, rs = flat_batch(), sharded_batch()
+        for a, b in zip(rf, rs):
+            assert np.array_equal(a.scores, b.scores)
+            assert np.array_equal(a.ids, b.ids)
+
+        def clock(fn):
+            fn()
+            t0 = time.perf_counter_ns()
+            for _ in range(REPEAT):
+                out = fn()
+            return (time.perf_counter_ns() - t0) / REPEAT / 1e3, out
+
+        flat_us, _ = clock(flat_batch)
+        shard_us, out = clock(sharded_batch)
+        acct = out[0].batch
+        assert acct.shard_mask_hits == acct.plan_groups.get("scan", 0), \
+            "steady-state batches must serve every scan scope from slots"
+        rows.append({"name": f"sharded/{ds_name}/flat_batch",
+                     "us_per_call": flat_us,
+                     "derived": f"B={B};k={K};devices=1"})
+        rows.append({
+            "name": f"sharded/{ds_name}/sharded_batch",
+            "us_per_call": shard_us,
+            "derived": (f"speedup={flat_us / shard_us:.2f}x(emulated);"
+                        f"n_shards={acct.n_shards};"
+                        f"launches={acct.launches};"
+                        f"collective_bytes={acct.collective_bytes};"
+                        f"mask_hit_groups={acct.shard_mask_hits}")})
+
+        # DSM: shard-resident masks patch, results stay bit-identical
+        m0, up0 = ex.mask_bytes_patched, ex.mask_bytes_uploaded
+        db.dsm_batch([("mkdir", "/bench_stage/"),
+                      ("move", "/bench_src/fresh/", "/bench_stage/")])
+        rf, rs = flat_batch(), sharded_batch()
+        for a, b in zip(rf, rs):
+            assert np.array_equal(a.scores, b.scores)
+            assert np.array_equal(a.ids, b.ids)
+        patched_bytes = ex.mask_bytes_patched - m0
+        reupload_bytes = ex.mask_bytes_uploaded - up0
+        full_row = ex.view.n_words * 4
+        rows.append({
+            "name": f"sharded/{ds_name}/post_dsm",
+            "us_per_call": 0.0,
+            "derived": (f"masks_patched={ex.masks_patched};"
+                        f"patch_bytes={patched_bytes};"
+                        f"full_row_bytes={full_row};"
+                        f"reupload_bytes={reupload_bytes}")})
+
+        # incremental ingest: only new rows travel (until capacity)
+        b0, r0 = ex.view.db_bytes_uploaded, ex.view.reshards
+        grow = min(64, ex.view.cap - len(db.store))
+        if grow > 0:
+            db.ingest(rng.normal(size=(grow, DIM)).astype(np.float32),
+                      ["/"] * grow)
+            sharded_batch()
+            assert ex.view.reshards == r0
+            assert ex.view.db_bytes_uploaded - b0 == grow * DIM * 4
+            rows.append({
+                "name": f"sharded/{ds_name}/ingest_growth",
+                "us_per_call": 0.0,
+                "derived": (f"rows={grow};"
+                            f"bytes={ex.view.db_bytes_uploaded - b0};"
+                            f"reshards=0")})
+        if smoke:
+            # acceptance gate: the DSM delta really patched (not rebuilt)
+            assert ex.masks_patched >= 1, "no shard-resident mask was patched"
+            assert patched_bytes > 0
+            assert patched_bytes < full_row, (
+                "a word-range patch must move less than a full row re-upload")
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=SCALE)
+    ap.add_argument("--smoke", action="store_true",
+                    help="enforce the correctness/accounting acceptance gate")
+    ap.add_argument("--json", default="",
+                    help="also write the result rows to this JSON file")
+    ap.add_argument("--inner", action="store_true",
+                    help="(internal) run the measurement in this process; "
+                         "requires the 8-device XLA_FLAGS already set")
+    args = ap.parse_args()
+    if args.inner:
+        rows = _inner(args.scale, args.smoke)
+        print(MARK + json.dumps(rows))
+        return
+    rows = run(scale=args.scale, smoke=args.smoke)
+    from .common import emit
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -169,6 +169,15 @@ class ScopeIndex(abc.ABC):
         cached scopes die through the normal epoch mismatch."""
         self._dsm_listeners.append(fn)
 
+    def unsubscribe_dsm(self, fn: Callable[[DSMDelta], None]) -> None:
+        """Remove a previously-registered delta listener (no-op if absent) —
+        a replaced subscriber (e.g. a rebuilt sharded executor) must be
+        dropped or it stays referenced, and patched, forever."""
+        try:
+            self._dsm_listeners.remove(fn)
+        except ValueError:
+            pass
+
     def _emit_dsm(self, event: DSMDelta) -> None:
         for fn in self._dsm_listeners:
             fn(event)

@@ -11,7 +11,14 @@ pair holds ~billions of 1024-d bf16 rows). A DSQ executes as:
 
 This mirrors the paper's architecture (scope resolution feeds the ANN
 executor) at pod scale; the collective term is tiny by design, making the scan
-compute/memory-bound — see EXPERIMENTS.md §Roofline "viking-scan" rows.
+compute/memory-bound — see the "viking-scan" rows produced by
+``python -m repro.launch.dryrun --viking-scan`` (results/dryrun/) and the
+``benchmarks.bench_roofline`` section of ``benchmarks.run``.
+
+:func:`make_sharded_batch_search` is the serving-tier entry point consumed by
+``vectordb.sharded.ShardedExecutor``: the same row-sharded scan, but ranking a
+whole heterogeneous request batch against a device-resident packed scope-mask
+table in ONE launch (scope-id indirection, tombstones ANDed in-register).
 """
 from __future__ import annotations
 
@@ -24,6 +31,23 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import compat
+
+
+def _merge_local_topk(v, i, axes, n_dev: int, n_loc: int, k: int):
+    """Shard-order merge of per-shard top-k triples: all_gather the
+    (score, global-id) pairs, then one final top_k. Concatenation is
+    shard-major with each shard's block already index-ordered, so exact
+    score ties resolve to the lowest global id — bit-compatible with a
+    single-device full-array top_k. Shared by every search builder below;
+    a drift between copies would silently break that contract."""
+    shard = jax.lax.axis_index(axes)
+    gi = i.astype(jnp.int32) + shard * n_loc
+    av = jax.lax.all_gather(v, axes, tiled=False)            # (n_dev, q, k)
+    ai = jax.lax.all_gather(gi, axes, tiled=False)
+    av = av.transpose(1, 0, 2).reshape(-1, n_dev * k)
+    ai = ai.transpose(1, 0, 2).reshape(-1, n_dev * k)
+    fv, fi = jax.lax.top_k(av, k)
+    return fv, jnp.take_along_axis(ai, fi, axis=1)
 
 
 def make_scoped_search(mesh: Mesh, n_total: int, dim: int, k: int,
@@ -51,16 +75,7 @@ def make_scoped_search(mesh: Mesh, n_total: int, dim: int, k: int,
                 db_l.astype(jnp.float32) ** 2, axis=-1)[None, :]
         scores = jnp.where(mask_l[None, :] != 0, scores, -jnp.inf)
         v, i = jax.lax.top_k(scores, k)                      # (q, k) local
-        shard = jax.lax.axis_index(axes)                     # flattened index
-        gi = i.astype(jnp.int32) + shard * n_loc
-        # gather candidates from every shard and merge
-        av = jax.lax.all_gather(v, axes, tiled=False)        # (n_dev, q, k)
-        ai = jax.lax.all_gather(gi, axes, tiled=False)
-        av = av.transpose(1, 0, 2).reshape(-1, n_dev * k)
-        ai = ai.transpose(1, 0, 2).reshape(-1, n_dev * k)
-        fv, fi = jax.lax.top_k(av, k)
-        fid = jnp.take_along_axis(ai, fi, axis=1)
-        return fv, fid
+        return _merge_local_topk(v, i, axes, n_dev, n_loc, k)
 
     fn = compat.shard_map(
         local_search, mesh=mesh,
@@ -107,19 +122,61 @@ def make_multi_scope_search(mesh: Mesh, n_total: int, dim: int, k: int,
         valid = jnp.take(masks, sids, axis=0)                # (q, n_loc)
         scores = jnp.where(valid, scores, -jnp.inf)
         v, i = jax.lax.top_k(scores, k)
-        shard = jax.lax.axis_index(axes)
-        gi = i.astype(jnp.int32) + shard * n_loc
-        av = jax.lax.all_gather(v, axes, tiled=False)
-        ai = jax.lax.all_gather(gi, axes, tiled=False)
-        av = av.transpose(1, 0, 2).reshape(-1, n_dev * k)
-        ai = ai.transpose(1, 0, 2).reshape(-1, n_dev * k)
-        fv, fi = jax.lax.top_k(av, k)
-        fid = jnp.take_along_axis(ai, fi, axis=1)
-        return fv, fid
+        return _merge_local_topk(v, i, axes, n_dev, n_loc, k)
 
     fn = compat.shard_map(
         local_search, mesh=mesh,
         in_specs=(P(axes, None), P(None, axes), P(None), P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_sharded_batch_search(mesh: Mesh, n_total: int, dim: int, k: int,
+                              metric: str = "ip"):
+    """Serving-tier launch: batched heterogeneous-scope scan over a
+    device-resident scope table, tombstone-aware.
+
+    db     : (n_total, dim) float32    sharded row-wise over all mesh axes
+    words  : (n_scopes, n_total/32)    packed uint32 scope-mask table,
+                                       sharded on the word dim (each shard
+                                       holds the words covering its rows)
+    alive  : (n_total/32,) uint32      packed alive/in-range mask, sharded
+                                       like one table row (tombstoned rows
+                                       and capacity-padding rows are 0)
+    sids   : (q,) int32                replicated; row into ``words``
+    queries: (q, dim) float32          replicated
+
+    Differences from :func:`make_multi_scope_search`: the mask matrix is a
+    persistent *table* (slots owned by ``ShardedExecutor``, patched in place
+    by DSM deltas) rather than a per-batch stack, the tombstone mask is ANDed
+    in-register, and the scoring expression is kept textually identical to
+    the single-device flat scan twin (``flat._multi_scan_topk``) so the
+    merged (scores, ids) are bit-identical to the flat batch path on CPU."""
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n_total % n_dev == 0, (n_total, n_dev)
+    n_loc = n_total // n_dev
+    assert n_loc % 32 == 0, (n_loc, "local rows must be word-aligned")
+    assert 0 < k <= n_loc, (k, n_loc, "per-shard top-k must fit local rows")
+
+    def local_search(db_l, words_l, alive_l, sids, q):
+        # identical expression to flat._multi_scan_topk (bit-identity)
+        scores = q @ db_l.T
+        if metric == "l2":
+            scores = 2.0 * scores - jnp.sum(db_l * db_l, axis=-1)[None, :]
+        from ..kernels.ref import unpack_words_ref
+        qwords = jnp.take(words_l, sids, axis=0) & alive_l[None, :]
+        valid = unpack_words_ref(qwords, n_loc)              # (q, n_loc)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        v, i = jax.lax.top_k(scores, k)
+        return _merge_local_topk(v, i, axes, n_dev, n_loc, k)
+
+    fn = compat.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(axes, None), P(None, axes), P(axes), P(None),
+                  P(None, None)),
         out_specs=(P(None, None), P(None, None)),
         check_vma=False,
     )
@@ -137,3 +194,27 @@ def search_input_specs(mesh: Mesh, n_total: int, dim: int, n_queries: int,
                  NamedSharding(mesh, P(axes)),
                  NamedSharding(mesh, P(None, None)))
     return (db, mask, q), shardings
+
+
+def multi_scope_search_input_specs(mesh: Mesh, n_total: int, dim: int,
+                                   n_queries: int, n_scopes: int,
+                                   dtype=jnp.float32):
+    """Multi-scope (packed words + scope ids) variant of
+    :func:`search_input_specs`: ShapeDtypeStructs + shardings matching the
+    :func:`make_sharded_batch_search` signature, so ``launch/dryrun.py`` can
+    lower/compile the batched sharded scan without materializing a store."""
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n_total % (32 * n_dev) == 0, (n_total, n_dev)
+    n_words = n_total // 32
+    db = jax.ShapeDtypeStruct((n_total, dim), dtype)
+    words = jax.ShapeDtypeStruct((n_scopes, n_words), jnp.uint32)
+    alive = jax.ShapeDtypeStruct((n_words,), jnp.uint32)
+    sids = jax.ShapeDtypeStruct((n_queries,), jnp.int32)
+    q = jax.ShapeDtypeStruct((n_queries, dim), jnp.float32)
+    shardings = (NamedSharding(mesh, P(axes, None)),
+                 NamedSharding(mesh, P(None, axes)),
+                 NamedSharding(mesh, P(axes)),
+                 NamedSharding(mesh, P(None)),
+                 NamedSharding(mesh, P(None, None)))
+    return (db, words, alive, sids, q), shardings

@@ -130,6 +130,45 @@ def run_viking_scan(multi_pod: bool, n_total: int = 2 ** 28, dim: int = 1024,
     return rec
 
 
+def run_viking_scan_batch(multi_pod: bool, n_total: int = 2 ** 28,
+                          dim: int = 1024, n_queries: int = 64,
+                          n_scopes: int = 16, k: int = 100) -> dict:
+    """Dry-run of the batched sharded serving step: one shard_map launch
+    ranks a heterogeneous mixed-scope request batch against the
+    device-resident packed scope-mask table (the ``ShardedExecutor`` launch,
+    ``distributed.search.make_sharded_batch_search``)."""
+    from repro.distributed.search import (make_sharded_batch_search,
+                                          multi_scope_search_input_specs)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_device_count(mesh)
+    rec = {"arch": "viking-scan-batch",
+           "shape": f"n{n_total}_q{n_queries}_s{n_scopes}_k{k}",
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "model_flops": 2.0 * n_total * dim * n_queries}
+    try:
+        t0 = time.time()
+        fn = make_sharded_batch_search(mesh, n_total, dim, k)
+        args, shardings = multi_scope_search_input_specs(
+            mesh, n_total, dim, n_queries, n_scopes)
+        with mesh:
+            lowered = jax.jit(fn.__wrapped__ if hasattr(fn, "__wrapped__")
+                              else fn, in_shardings=shardings).lower(*args)
+            compiled = lowered.compile()
+        m = RL.cost_summary(compiled)
+        m["compile_s"] = time.time() - t0
+        m["chips"] = chips
+        m["flops_global"] = m["flops"] * chips
+        m["bytes_global"] = m["bytes"] * chips
+        print(compiled.memory_analysis())
+        rec["full"] = m
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default=None, help="single arch (default: all)")
@@ -187,13 +226,16 @@ def main():
                       + (f" :: {rec.get('error', '')}" if status == "FAIL"
                          else ""), flush=True)
         if args.viking_scan:
-            name = f"viking-scan_{mesh_name}"
-            path = outdir / f"{name}.json"
-            if not path.exists() or args.force:
-                rec = run_viking_scan(multi_pod)
-                path.write_text(json.dumps(rec, indent=1))
-                print(f"[{'OK' if rec.get('ok') else 'FAIL'}] {name}",
-                      flush=True)
+            for name, runner in ((f"viking-scan_{mesh_name}",
+                                  run_viking_scan),
+                                 (f"viking-scan-batch_{mesh_name}",
+                                  run_viking_scan_batch)):
+                path = outdir / f"{name}.json"
+                if not path.exists() or args.force:
+                    rec = runner(multi_pod)
+                    path.write_text(json.dumps(rec, indent=1))
+                    print(f"[{'OK' if rec.get('ok') else 'FAIL'}] {name}",
+                          flush=True)
 
 
 if __name__ == "__main__":

@@ -79,7 +79,10 @@ class ContextDatabase:
                        ) -> List[Tuple[List[ContextEntry], Dict[str, float]]]:
         """Batched scoped retrieval: N concurrent requests resolve repeated
         scopes once and share ranking launches (``dsq_batch``), instead of
-        N independent resolve+launch round-trips."""
+        N independent resolve+launch round-trips. With
+        ``cfg.executor == "sharded"`` the shared scan launch runs on the
+        row-sharded device mesh (bit-identical results; the per-shard
+        byte/collective accounting is surfaced in the stats)."""
         results = self.db.dsq_batch(np.atleast_2d(query_vecs), list(scopes),
                                     k=cfg.k, recursive=recursive,
                                     exclude=exclude, executor=cfg.executor)
@@ -89,6 +92,10 @@ class ContextDatabase:
             stats = {"directory_us": res.directory_ns / 1e3,
                      "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size,
                      "plan": res.plan, "scope_shared": res.scope_shared}
+            if res.batch is not None and res.batch.n_shards:
+                stats["n_shards"] = res.batch.n_shards
+                stats["shard_mask_bytes"] = res.batch.shard_mask_bytes
+                stats["collective_bytes"] = res.batch.collective_bytes
             out.append((hits, stats))
         return out
 

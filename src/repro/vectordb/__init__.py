@@ -4,8 +4,10 @@ from .graph import PGIndex
 from .ivf import IVFIndex
 from .planner import (BatchAccounting, BatchPlanner, PlanGroup, ScopeKey,
                       ScopeMaskCache, device_popcount)
-from .store import VectorStore
+from .sharded import ShardedExecutor
+from .store import ShardedStoreView, VectorStore, pack_ids_to_words
 
 __all__ = ["DirectoryVectorDB", "DSQResult", "FlatExecutor", "PGIndex",
            "IVFIndex", "VectorStore", "BatchAccounting", "BatchPlanner",
-           "PlanGroup", "ScopeKey", "ScopeMaskCache", "device_popcount"]
+           "PlanGroup", "ScopeKey", "ScopeMaskCache", "device_popcount",
+           "ShardedExecutor", "ShardedStoreView", "pack_ids_to_words"]

@@ -8,6 +8,7 @@ through the journaled, region-locked executor (§IV-A consistency ordering).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -21,6 +22,7 @@ from .flat import FlatExecutor
 from .graph import PGIndex
 from .ivf import IVFIndex
 from .planner import BatchAccounting, BatchPlanner, ScopeMaskCache
+from .sharded import ShardedExecutor
 from .store import VectorStore
 
 DEFAULT_NS = "fs"
@@ -59,6 +61,7 @@ class DirectoryVectorDB:
         self._dsm: Dict[str, DSMExecutor] = {}
         self._planners: Dict[str, BatchPlanner] = {}
         self._journal_path = journal_path
+        self._sharded_subs: Dict[str, object] = {}   # ns -> delta listener
         self.namespace(DEFAULT_NS)  # default filesystem namespace
 
     # -------------------------------------------------------------- plumbing
@@ -69,6 +72,11 @@ class DirectoryVectorDB:
             journal = DSMJournal(
                 f"{self._journal_path}.{name}" if self._journal_path else None)
             self._dsm[name] = DSMExecutor(idx, journal)
+            ex = self.executors.get("sharded")
+            if ex is not None:
+                self._sharded_subs[name] = functools.partial(
+                    ex.apply_delta, namespace=name)
+                idx.subscribe_dsm(self._sharded_subs[name])
         return self.namespaces[name]
 
     def build_ann(self, kind: str, **params) -> None:
@@ -78,6 +86,20 @@ class DirectoryVectorDB:
             self.executors["ivf"] = IVFIndex(self.store, **params)
         elif kind == "pg":
             self.executors["pg"] = PGIndex(self.store, **params)
+        elif kind == "sharded":
+            # the mesh serving tier: subscribed to every namespace's DSM
+            # delta stream so shard-resident scope masks patch in place.
+            # A rebuild drops the old executor's subscriptions first — they
+            # would otherwise pin its device store + table forever.
+            for name, fn in self._sharded_subs.items():
+                self.namespaces[name].unsubscribe_dsm(fn)
+            self._sharded_subs.clear()
+            ex = ShardedExecutor(self.store, **params)
+            self.executors["sharded"] = ex
+            for name, idx in self.namespaces.items():
+                self._sharded_subs[name] = functools.partial(
+                    ex.apply_delta, namespace=name)
+                idx.subscribe_dsm(self._sharded_subs[name])
         else:
             raise ValueError(f"unknown ANN executor {kind!r}")
 
@@ -167,13 +189,15 @@ class DirectoryVectorDB:
         instead — same top-k members, low-bit/tie order may differ), but the
         directory and kernel work is amortized (see ``DSQResult.batch``).
 
-        All three executors are batch-planned: ``flat`` shares one
+        All four executors are batch-planned: ``flat`` shares one
         multi-scope scan launch, ``ivf`` shares one fused
         probe→gather→score→top-k launch per distinct ``nprobe`` (identical
         probed candidate sets and top-k members as the loop; low score bits
-        may differ with batch shape, like the fused-kernel caveat), and
-        ``pg`` shares each unique scope's traversal mask (bit-identical).
-        The per-request fallback loop remains only for executor params the
+        may differ with batch shape, like the fused-kernel caveat), ``pg``
+        shares each unique scope's traversal mask (bit-identical), and
+        ``sharded`` ranks every scan-plan request in one shard_map launch
+        over the row-sharded device mesh (bit-identical to ``flat``). The
+        per-request fallback loop remains only for executor params the
         planner cannot plan."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         B = queries.shape[0]
@@ -193,6 +217,9 @@ class DirectoryVectorDB:
             return self._dsq_batch_pg(ex, queries, paths, k, recursive,
                                       exclude, namespace,
                                       executor_params.get("ef_search", 64))
+        if isinstance(ex, ShardedExecutor) and not executor_params:
+            return self._dsq_batch_sharded(ex, queries, paths, k, recursive,
+                                           exclude, namespace, use_pallas)
         if not isinstance(ex, FlatExecutor) or executor_params:
             # explicit executor params the planner cannot plan (e.g. a forced
             # plan="scan") must reach the executor exactly as the per-request
@@ -203,28 +230,14 @@ class DirectoryVectorDB:
                                             **executor_params)
 
         def launch_flat(groups, out_scores, out_ids, acct):
-            # one launch per gather group
-            for g in groups:
-                if g.plan != "gather":
-                    continue
-                rows = np.asarray(g.request_idx)
-                s, i = ex.search(queries[rows], k,
-                                 candidate_ids=g.candidate_ids,
-                                 plan="gather")
-                out_scores[rows] = s
-                out_ids[rows] = i
-                acct.launches += 1
+            self._launch_gather(ex, queries, k, groups, out_scores, out_ids,
+                                acct)
             # ONE launch for every scan-plan request in the batch
             scan_groups = [g for g in groups if g.plan == "scan"]
             if scan_groups:
                 words = np.stack([g.words for g in scan_groups])
-                rows, sids = [], []
-                for si, g in enumerate(scan_groups):
-                    rows.extend(g.request_idx)
-                    sids.extend([si] * len(g.request_idx))
-                rows = np.asarray(rows)
-                s, i = ex.search_multi(queries[rows], words,
-                                       np.asarray(sids, np.int32), k,
+                rows, sids = self._scan_assembly(scan_groups)
+                s, i = ex.search_multi(queries[rows], words, sids, k,
                                        use_pallas=use_pallas)
                 out_scores[rows] = s
                 out_ids[rows] = i
@@ -232,6 +245,33 @@ class DirectoryVectorDB:
 
         return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
                                        namespace, launch_flat)
+
+    @staticmethod
+    def _launch_gather(flat_ex, queries, k, groups, out_scores, out_ids,
+                       acct) -> None:
+        """One gather launch per selective group — shared by the flat and
+        sharded batch paths (the sharded tier delegates selective scopes to
+        the identical single-device gather, which is what keeps it
+        bit-identical to flat there)."""
+        for g in groups:
+            if g.plan != "gather":
+                continue
+            rows = np.asarray(g.request_idx)
+            s, i = flat_ex.search(queries[rows], k,
+                                  candidate_ids=g.candidate_ids,
+                                  plan="gather")
+            out_scores[rows] = s
+            out_ids[rows] = i
+            acct.launches += 1
+
+    @staticmethod
+    def _scan_assembly(scan_groups) -> Tuple[np.ndarray, np.ndarray]:
+        """(request rows, per-request group ordinals) for one scan launch."""
+        rows, sids = [], []
+        for si, g in enumerate(scan_groups):
+            rows.extend(g.request_idx)
+            sids.extend([si] * len(g.request_idx))
+        return np.asarray(rows), np.asarray(sids, np.int32)
 
     def _dsq_batch_planned(self, queries, paths, k, recursive, exclude,
                            namespace, launch, label: Optional[str] = None
@@ -270,6 +310,58 @@ class DirectoryVectorDB:
                 ann_ns=ann_share, resolve_stats=acct.resolve_stats,
                 plan=plan, scope_shared=len(g.request_idx), batch=acct))
         return results
+
+    def _dsq_batch_sharded(self, ex, queries, paths, k, recursive, exclude,
+                           namespace, use_pallas=False) -> List[DSQResult]:
+        """Batched DSQ on the sharded serving tier: unique scopes resolve
+        once (cache-first), scan-plan groups pin their packed words into the
+        executor's device-resident scope table (token-validated — repeated
+        scopes and DSM-delta-patched scopes never re-upload) and ride ONE
+        shard_map launch; selective gather-plan groups stay on the
+        single-device gather launch, exactly like the flat path. Results are
+        bit-identical to ``executor="flat"``. ``use_pallas`` only reaches
+        the single-device flat twin (the small-store fallback) — the mesh
+        launch has no fused-kernel variant."""
+
+        def launch_sharded(groups, out_scores, out_ids, acct):
+            db0 = ex.view.db_bytes_uploaded
+            m0 = ex.mask_bytes_uploaded
+            self._launch_gather(ex.flat, queries, k, groups, out_scores,
+                                out_ids, acct)
+            scan_groups = [g for g in groups if g.plan == "scan"]
+            if scan_groups:
+                # only the mesh path reads the device mirror — a gather-only
+                # batch never pays the store upload
+                ex.sync()
+                if ex.scan_on_mesh(k):
+                    ex.reserve(len(scan_groups))
+                    rows, sids = [], []
+                    for g in scan_groups:
+                        slot, hit = ex.ensure_scope(namespace, g.key, g.entry)
+                        acct.shard_mask_hits += int(hit)
+                        rows.extend(g.request_idx)
+                        sids.extend([slot] * len(g.request_idx))
+                    rows = np.asarray(rows)
+                    s, i = ex.search_slots(queries[rows],
+                                           np.asarray(sids, np.int32), k)
+                    acct.collective_bytes += (ex.n_shards * len(rows) * k * 8)
+                else:
+                    # store too small for a k-deep per-shard top-k: the
+                    # single-device flat twin is bit-identical by definition
+                    words = np.stack([g.words for g in scan_groups])
+                    rows, sids = self._scan_assembly(scan_groups)
+                    s, i = ex.flat.search_multi(queries[rows], words, sids,
+                                                k, use_pallas=use_pallas)
+                out_scores[rows] = s
+                out_ids[rows] = i
+                acct.launches += 1
+            acct.n_shards = ex.n_shards
+            acct.shard_db_bytes += ex.view.db_bytes_uploaded - db0
+            acct.shard_mask_bytes += ex.mask_bytes_uploaded - m0
+
+        return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
+                                       namespace, launch_sharded,
+                                       label="sharded")
 
     def _dsq_batch_ivf(self, ex, queries, paths, k, recursive, exclude,
                        namespace, use_pallas, nprobe) -> List[DSQResult]:

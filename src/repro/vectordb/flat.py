@@ -24,6 +24,28 @@ from .store import VectorStore
 GATHER_THRESHOLD = 0.05   # use gather plan below this scope selectivity
 
 
+def choose_plan(m: int, n: int, k: int,
+                threshold: float = GATHER_THRESHOLD) -> str:
+    """THE gather/scan decision rule. ``FlatExecutor.search``, the
+    ``BatchPlanner`` and ``ShardedExecutor.search`` all delegate here — the
+    batch==loop and sharded==flat bit-identity contracts require every path
+    to pick the same plan for the same scope."""
+    return "gather" if m <= max(k, threshold * n) else "scan"
+
+
+def pad_topk(scores: np.ndarray, ids: np.ndarray,
+             k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-pad (q, kk) results to (q, k) with the -inf / -1 sentinels."""
+    kk = scores.shape[1]
+    if kk >= k:
+        return scores, np.asarray(ids, dtype=np.int64)
+    q = scores.shape[0]
+    pad_s = np.full((q, k - kk), -np.inf, np.float32)
+    pad_i = np.full((q, k - kk), -1, np.int64)
+    return (np.concatenate([scores, pad_s], axis=1),
+            np.concatenate([np.asarray(ids, np.int64), pad_i], axis=1))
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
 def _scan_topk(queries: jnp.ndarray, rows: jnp.ndarray, mask: jnp.ndarray,
                k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -93,7 +115,7 @@ class FlatExecutor:
             return (np.full((q, k), -np.inf, np.float32),
                     np.full((q, k), -1, np.int64))
         if plan is None:
-            plan = "gather" if m <= max(k, GATHER_THRESHOLD * n) else "scan"
+            plan = choose_plan(m, n, k)
         kk = min(k, m)
         if plan == "gather":
             cand_rows = self.store.vectors[candidate_ids]
@@ -108,13 +130,7 @@ class FlatExecutor:
                 jnp.asarray(queries), self.store.device_vectors(),
                 jnp.asarray(mask), kk, self.store.metric)
             ids = np.asarray(ids)
-        scores = np.asarray(scores)
-        if kk < k:  # pad to k
-            pad_s = np.full((queries.shape[0], k - kk), -np.inf, np.float32)
-            pad_i = np.full((queries.shape[0], k - kk), -1, np.int64)
-            scores = np.concatenate([scores, pad_s], axis=1)
-            ids = np.concatenate([np.asarray(ids, np.int64), pad_i], axis=1)
-        return scores, np.asarray(ids, dtype=np.int64)
+        return pad_topk(np.asarray(scores), ids, k)
 
     def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
                      scope_ids: np.ndarray, k: int,

@@ -240,24 +240,8 @@ class IVFIndex:
         Device-batched single-scope front door over :meth:`search_multi`."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         n = len(self.store)
-        n_words = max((n + 31) // 32, 1)
-        if candidate_ids is None:
-            words = np.full(n_words, 0xFFFFFFFF, dtype=np.uint32)
-            if n % 32:
-                words[-1] = np.uint32((1 << (n % 32)) - 1)
-        else:
-            ids = np.asarray(candidate_ids, dtype=np.int64)
-            ids = ids[ids < n]
-            if len(ids) * 16 > n:
-                # broad scope: dense mask + packbits beats the per-id
-                # scattered bitwise_or.at
-                mask = np.zeros(n_words * 32, dtype=bool)
-                mask[ids] = True
-                words = np.packbits(mask, bitorder="little").view(np.uint32)
-            else:
-                words = np.zeros(n_words, dtype=np.uint32)
-                np.bitwise_or.at(words, ids >> 5,
-                                 np.uint32(1) << (ids & 31).astype(np.uint32))
+        from .store import pack_ids_to_words
+        words = pack_ids_to_words(candidate_ids, n)
         sids = np.zeros(queries.shape[0], dtype=np.int32)
         return self.search_multi(queries, words[None, :], sids, k,
                                  nprobe=nprobe)

@@ -31,7 +31,7 @@ import numpy as np
 from ..core import ResolveStats, RoaringBitmap, ScopeIndex
 from ..core import paths as P
 from ..core.interface import DSMDelta, ScopeSpec
-from .flat import GATHER_THRESHOLD
+from .flat import GATHER_THRESHOLD, choose_plan
 
 
 @dataclass(frozen=True)
@@ -278,6 +278,13 @@ class BatchAccounting:
     directory_ns: int = 0            # total resolve+plan time, whole batch
     ann_ns: int = 0                  # total ranking time, whole batch
     resolve_stats: ResolveStats = field(default_factory=ResolveStats)
+    # sharded-executor terms (zero on single-device paths): what this batch
+    # actually moved between host and mesh, and across the mesh
+    n_shards: int = 0
+    shard_db_bytes: int = 0          # store rows mirrored to the mesh
+    shard_mask_bytes: int = 0        # packed scope words uploaded (misses)
+    shard_mask_hits: int = 0         # scan groups served from resident slots
+    collective_bytes: int = 0        # all-gather (score, id) merge traffic
 
 
 def device_popcount(words: np.ndarray) -> int:
@@ -299,12 +306,11 @@ class BatchPlanner:
 
     def choose_plan(self, scope_size: int, n: int, k: int) -> str:
         """Same decision rule as the per-request FlatExecutor path (required
-        for bit-identical batch-vs-loop results)."""
+        for bit-identical batch-vs-loop results) — shared via
+        ``flat.choose_plan``."""
         if scope_size == 0:
             return "empty"
-        if scope_size <= max(k, self.gather_threshold * n):
-            return "gather"
-        return "scan"
+        return choose_plan(scope_size, n, k, self.gather_threshold)
 
     def plan(self, index: ScopeIndex, n: int, specs: Sequence[ScopeSpec],
              k: int, acct: BatchAccounting) -> List[PlanGroup]:

@@ -3,16 +3,74 @@
 Entry ids are row indices (uint32), the same ids kept in the scope indexes'
 RoaringBitmaps — the hand-off between the directory layer and the ANN executor
 is therefore a pure id-set/bitmask, per the paper's execution model (§II-A).
+
+:class:`ShardedStoreView` is the multi-device mirror of that contract: the
+same append-only rows, kept row-sharded across a device mesh with incremental
+(amortized-doubling) re-shard on ingest growth, plus the packed alive mask the
+sharded scan ANDs in-register.
 """
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import Optional, Tuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 METRICS = ("ip", "l2", "cos")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(db: jnp.ndarray, rows: jnp.ndarray,
+                  start) -> jnp.ndarray:
+    """In-place row scatter (the old buffer is donated, so XLA updates it
+    without an O(capacity) copy — the point of the incremental sync).
+    Callers pad ``rows`` to power-of-two sizes so the jit cache stays
+    bounded at log2(capacity) traces instead of one per ingest size."""
+    return jax.lax.dynamic_update_slice(db, rows, (start, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_words(words: jnp.ndarray, seg: jnp.ndarray, start) -> jnp.ndarray:
+    """In-place word-range scatter for the packed alive mask (same donation
+    and power-of-two-width caveats as :func:`_scatter_rows`)."""
+    return jax.lax.dynamic_update_slice(words, seg, (start,))
+
+
+def _pow2_at_most(n: int, cap: int) -> int:
+    out = 1
+    while out < n:
+        out *= 2
+    return min(out, cap)
+
+
+def pack_ids_to_words(candidate_ids: Optional[np.ndarray],
+                      n: int) -> np.ndarray:
+    """Pack an id array into ``ceil(n/32)`` little-endian uint32 mask words
+    (the same layout as ``RoaringBitmap.to_words``). ``None`` packs the full
+    ``[0, n)`` range; out-of-range ids are dropped."""
+    n_words = max((n + 31) // 32, 1)
+    if candidate_ids is None:
+        words = np.full(n_words, 0xFFFFFFFF, dtype=np.uint32)
+        if n % 32:
+            words[-1] = np.uint32((1 << (n % 32)) - 1)
+        if n == 0:
+            words[:] = 0
+        return words
+    ids = np.asarray(candidate_ids, dtype=np.int64)
+    ids = ids[(ids >= 0) & (ids < n)]
+    if len(ids) * 16 > n:
+        # broad scope: dense mask + packbits beats the per-id scattered
+        # bitwise_or.at
+        mask = np.zeros(n_words * 32, dtype=bool)
+        mask[ids] = True
+        return np.packbits(mask, bitorder="little").view(np.uint32)
+    words = np.zeros(n_words, dtype=np.uint32)
+    np.bitwise_or.at(words, ids >> 5,
+                     np.uint32(1) << (ids & 31).astype(np.uint32))
+    return words
 
 
 class VectorStore:
@@ -34,6 +92,10 @@ class VectorStore:
         self._deleted = np.zeros(capacity, dtype=bool)
         self._n_deleted = 0
         self._alive_words: Optional[np.ndarray] = None
+        # append-only tombstone id log: incremental consumers (the sharded
+        # view's alive mask) patch only the words these ids touch instead of
+        # rebuilding/re-uploading the whole mask per delete
+        self._deleted_log: list = []
 
     def __len__(self) -> int:
         return self._n
@@ -79,11 +141,17 @@ class VectorStore:
             return
         self._deleted[fresh] = True
         self._n_deleted += len(fresh)
+        self._deleted_log.extend(int(i) for i in fresh)
         self._alive_words = None
 
     @property
     def n_deleted(self) -> int:
         return self._n_deleted
+
+    @property
+    def deleted_log(self) -> list:
+        """Append-only log of tombstoned ids (in mark order)."""
+        return self._deleted_log
 
     def deleted_mask(self) -> np.ndarray:
         return self._deleted[: self._n]
@@ -127,3 +195,136 @@ class VectorStore:
 
     def nbytes(self) -> int:
         return self._n * self.dim * 4
+
+
+class ShardedStoreView:
+    """Row-sharded device mirror of a :class:`VectorStore` over a mesh.
+
+    The device array is sized to a padded *capacity* (a multiple of
+    ``32 * n_shards``, so every shard's local rows stay word-aligned for the
+    packed scope masks) and shard ``s`` permanently owns rows
+    ``[s*n_loc, (s+1)*n_loc)``. That fixed block layout is what makes ingest
+    growth incremental: new rows land in-place via a device scatter touching
+    only the shards that cover them, and only growth *past* the capacity
+    forces a full re-shard — at a doubled capacity, so re-shard cost is
+    amortized O(1) per ingested row (the same policy as ``IVFIndex.add``).
+    Capacity-padding rows are zero vectors and are masked out by the packed
+    alive mask (:meth:`alive_device`), which also carries the store-level
+    tombstones."""
+
+    def __init__(self, store: VectorStore, mesh):
+        self.store = store
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
+        self.row_align = 32 * self.n_shards
+        self._db = None
+        self._cap = 0
+        self._synced = 0
+        self._alive = None               # device packed alive∧in-range words
+        self._alive_host = None          # host mirror of the same words
+        self._alive_n = 0                # rows covered by the mirror
+        self._alive_cursor = 0           # consumed prefix of the tombstone log
+        self.db_bytes_uploaded = 0       # incremental row-scatter traffic
+        self.alive_bytes_uploaded = 0    # alive-mask scatter traffic
+        self.reshards = 0                # full capacity re-shards
+
+    @property
+    def cap(self) -> int:
+        return self._cap
+
+    @property
+    def n_loc(self) -> int:
+        return self._cap // self.n_shards if self._cap else 0
+
+    @property
+    def n_words(self) -> int:
+        return self._cap // 32
+
+    @property
+    def db(self):
+        assert self._db is not None, "call sync() before reading the view"
+        return self._db
+
+    def _sharding(self, *spec):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec(*spec))
+
+    def sync(self) -> bool:
+        """Mirror any new store rows onto the mesh. Returns True when the
+        padded capacity changed (a full re-shard: device-resident masks
+        derived from the old capacity are invalid and must be rebuilt)."""
+        n = len(self.store)
+        if self._db is None or n > self._cap:
+            cap = max(self._cap, self.row_align)
+            while cap < n:
+                cap *= 2
+            host = np.zeros((cap, self.store.dim), dtype=np.float32)
+            host[:n] = self.store.vectors
+            self._db = jax.device_put(host, self._sharding(self.axes, None))
+            self._cap = cap
+            self._synced = n
+            self.db_bytes_uploaded += host.nbytes
+            self.reshards += 1
+            self._alive = None
+            return True
+        if n > self._synced:
+            n_new = n - self._synced
+            pad = _pow2_at_most(n_new, self._cap - self._synced)
+            chunk = np.zeros((pad, self.store.dim), dtype=np.float32)
+            chunk[:n_new] = self.store.vectors[self._synced:n]
+            self._db = _scatter_rows(self._db, jnp.asarray(chunk),
+                                     jnp.int32(self._synced))
+            self.db_bytes_uploaded += n_new * self.store.dim * 4
+            self._synced = n
+        return False
+
+    def _patch_alive_range(self, w_lo: int, w_hi: int) -> None:
+        """Recompute words [w_lo, w_hi) from authoritative store state and
+        scatter only that range to the device (power-of-two padded width)."""
+        n_words = self._cap // 32
+        w_hi = min(w_lo + _pow2_at_most(w_hi - w_lo, n_words - w_lo), n_words)
+        n = len(self.store)
+        g0, g1 = w_lo * 32, w_hi * 32
+        seg = np.zeros(g1 - g0, dtype=bool)
+        hi = min(n, g1)
+        if hi > g0:
+            seg[: hi - g0] = ~self.store.deleted_mask()[g0:hi]
+        words = np.packbits(seg, bitorder="little").view(np.uint32)
+        self._alive_host[w_lo:w_hi] = words
+        self._alive = _scatter_words(self._alive, jnp.asarray(words),
+                                     jnp.int32(w_lo))
+        self.alive_bytes_uploaded += words.nbytes
+
+    def alive_device(self):
+        """(cap/32,) packed uint32 alive ∧ in-range mask on the mesh:
+        capacity-padding rows and tombstoned rows are 0. Maintained
+        incrementally — appended rows and newly tombstoned ids (from the
+        store's tombstone log) patch only the word ranges they touch; a full
+        rebuild happens only on a capacity re-shard."""
+        n = len(self.store)
+        log = self.store.deleted_log
+        if self._alive is None:
+            padded = np.zeros(self._cap, dtype=bool)
+            ab = self.store.alive_bool()
+            padded[:n] = True if ab is None else ab
+            host = np.packbits(padded, bitorder="little").view(np.uint32)
+            self._alive_host = host
+            self._alive = jax.device_put(host, self._sharding(self.axes))
+            self.alive_bytes_uploaded += host.nbytes
+            self._alive_n = n
+            self._alive_cursor = len(log)
+            return self._alive
+        dirty: Optional[Tuple[int, int]] = None
+        if n > self._alive_n:
+            dirty = (self._alive_n >> 5, ((n - 1) >> 5) + 1)
+            self._alive_n = n
+        if len(log) > self._alive_cursor:
+            fresh = log[self._alive_cursor:]
+            lo, hi = min(fresh) >> 5, (max(fresh) >> 5) + 1
+            dirty = ((min(dirty[0], lo), max(dirty[1], hi))
+                     if dirty else (lo, hi))
+            self._alive_cursor = len(log)
+        if dirty is not None:
+            self._patch_alive_range(*dirty)
+        return self._alive
