@@ -151,9 +151,12 @@ def make_sharded_batch_search(mesh: Mesh, n_total: int, dim: int, k: int,
     Differences from :func:`make_multi_scope_search`: the mask matrix is a
     persistent *table* (slots owned by ``ShardedExecutor``, patched in place
     by DSM deltas) rather than a per-batch stack, the tombstone mask is ANDed
-    in-register, and the scoring expression is kept textually identical to
-    the single-device flat scan twin (``flat._multi_scan_topk``) so the
-    merged (scores, ids) are bit-identical to the flat batch path on CPU."""
+    in-register, and the ip/cos scoring expression is kept textually
+    identical to the single-device flat scan twin (``flat._multi_scan_topk``)
+    so the merged (scores, ids) are bit-identical to the flat batch path on
+    CPU. (The l2 norm term is computed in-kernel here, while the flat twin
+    reads the store's cached device norms — same values through np/jnp fp32
+    sums in practice, but l2 is outside the bit-identity contract.)"""
     axes = tuple(mesh.axis_names)
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
     assert n_total % n_dev == 0, (n_total, n_dev)
@@ -177,6 +180,62 @@ def make_sharded_batch_search(mesh: Mesh, n_total: int, dim: int, k: int,
         local_search, mesh=mesh,
         in_specs=(P(axes, None), P(None, axes), P(axes), P(None),
                   P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_sharded_batch_search_i8(mesh: Mesh, n_total: int, dim: int, r: int,
+                                 metric: str = "ip"):
+    """int8 scan phase of the two-phase sharded plan.
+
+    Each shard scores its slice of the *int8 scalar-quantized* store —
+    reading a quarter of the fp32 HBM bytes — keeps its local top-``r``
+    (``r`` = rescore_k), and the shard-order merge replicates a global
+    top-``r`` candidate set. The caller (``ShardedExecutor``) then runs ONE
+    exact fp32 gather-rescore over the merged candidates, so the mesh never
+    touches fp32 rows on the scan path at all.
+
+    qdb    : (n_total, dim) int8      codes, sharded row-wise over all axes
+    qscale : (n_total,) float32       per-row dequantization scales, sharded
+    words  : (n_scopes, n_total/32)   packed scope table, sharded on words
+    alive  : (n_total/32,) uint32     packed alive/in-range mask, sharded
+    sids   : (q,) int32               replicated; row into ``words``
+    q_i8   : (q, dim) int8            quantized queries, replicated
+    q_scale: (q,) float32             query scales, replicated
+
+    Returns (int8-phase scores (q, r), global ids (q, r)) replicated; the
+    scores are the quantized approximations (callers rescore, not rank, by
+    them). The int8 dot rides the f32 GEMM while exact (every partial sum an
+    integer < 2^24 — ``flat._int_exact_dot``'s trade), so backends without a
+    fast int8 MXU path still scan correctly."""
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n_total % n_dev == 0, (n_total, n_dev)
+    n_loc = n_total // n_dev
+    assert n_loc % 32 == 0, (n_loc, "local rows must be word-aligned")
+    assert 0 < r <= n_loc, (r, n_loc, "per-shard top-r must fit local rows")
+
+    def local_search(qdb_l, qscale_l, words_l, alive_l, sids, q_i8, q_scale):
+        from ..vectordb.quant import int_exact_dot
+        s = int_exact_dot(q_i8, qdb_l)
+        scores = s * (q_scale[:, None] * qscale_l[None, :])
+        if metric == "l2":
+            codes = qdb_l.astype(jnp.float32)
+            sq = jnp.sum(codes * codes, axis=-1) * qscale_l * qscale_l
+            scores = 2.0 * scores - sq[None, :]
+        from ..kernels.ref import unpack_words_ref
+        qwords = jnp.take(words_l, sids, axis=0) & alive_l[None, :]
+        valid = unpack_words_ref(qwords, n_loc)              # (q, n_loc)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        v, i = jax.lax.top_k(scores, r)
+        return _merge_local_topk(v, i, axes, n_dev, n_loc, r)
+
+    fn = compat.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(None, axes), P(axes), P(None),
+                  P(None, None), P(None)),
         out_specs=(P(None, None), P(None, None)),
         check_vma=False,
     )

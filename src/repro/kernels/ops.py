@@ -17,7 +17,9 @@ from .bitmap_ops import mask_and_popcount as _mask_and_popcount
 from .flash_decode import flash_decode as _flash_decode
 from .scoped_topk import ivf_gather_topk as _ivf_gather_topk
 from .scoped_topk import multi_scope_topk as _multi_scope_topk
+from .scoped_topk import multi_scope_topk_i8 as _multi_scope_topk_i8
 from .scoped_topk import scoped_topk as _scoped_topk
+from .scoped_topk import scoped_topk_i8 as _scoped_topk_i8
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
@@ -49,6 +51,63 @@ def scoped_topk(queries, rows, mask, k: int = 10, metric: str = "ip",
     vals, ids = _scoped_topk(qp, rp, mp, k=k, block_q=block_q,
                              block_n=block_n, metric=metric,
                              interpret=interpret)
+    return vals[:nq], ids[:nq]
+
+
+def scoped_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask, k: int = 10,
+                   metric: str = "ip", block_q: int = 8, block_n: int = 1024,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Masked top-k over the int8 scalar-quantized store (the scan phase of
+    the two-phase int8 plan); pads q/n to block multiples, unpads results.
+    Row-axis padding is scale-0 zero codes with a 0 mask bit — score 0,
+    never a candidate."""
+    interpret = _INTERPRET if interpret is None else interpret
+    q_i8 = jnp.asarray(q_i8, dtype=jnp.int8)
+    rows_i8 = jnp.asarray(rows_i8, dtype=jnp.int8)
+    block_n = min(block_n, max(128, rows_i8.shape[0]))
+    block_q = min(block_q, max(1, q_i8.shape[0]))
+    qp, nq = _pad_to(q_i8, 0, block_q)
+    qsp, _ = _pad_to(jnp.asarray(q_scale, jnp.float32), 0, block_q)
+    rp, _ = _pad_to(rows_i8, 0, block_n)
+    rsp, _ = _pad_to(jnp.asarray(row_scale, jnp.float32), 0, block_n)
+    sqp, _ = _pad_to(jnp.asarray(sq, jnp.float32), 0, block_n)
+    mp, _ = _pad_to(jnp.asarray(mask).astype(jnp.int8), 0, block_n, value=0)
+    vals, ids = _scoped_topk_i8(qp, qsp, rp, rsp, sqp, mp, k=k,
+                                block_q=block_q, block_n=block_n,
+                                metric=metric, interpret=interpret)
+    return vals[:nq], ids[:nq]
+
+
+def multi_scope_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask_words,
+                        scope_ids, k: int = 10, metric: str = "ip",
+                        block_q: int = 8, block_n: int = 1024,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch heterogeneous masked top-k over the int8 store: packed
+    (n_scopes, n/32) scope-mask indirection like :func:`multi_scope_topk`,
+    int8/int32 scoring like :func:`scoped_topk_i8`. Pads q to block_q, n
+    (codes + scales + norms + mask words) to block_n, unpads results."""
+    interpret = _INTERPRET if interpret is None else interpret
+    q_i8 = jnp.asarray(q_i8, dtype=jnp.int8)
+    rows_i8 = jnp.asarray(rows_i8, dtype=jnp.int8)
+    mask_words = jnp.asarray(mask_words, dtype=jnp.uint32)
+    scope_ids = jnp.asarray(scope_ids, dtype=jnp.int32)
+    block_n = min(block_n, max(128, rows_i8.shape[0]))
+    block_n = ((block_n + 31) // 32) * 32
+    block_q = min(block_q, max(1, q_i8.shape[0]))
+    qp, nq = _pad_to(q_i8, 0, block_q)
+    qsp, _ = _pad_to(jnp.asarray(q_scale, jnp.float32), 0, block_q)
+    rp, n = _pad_to(rows_i8, 0, block_n)
+    rsp, _ = _pad_to(jnp.asarray(row_scale, jnp.float32), 0, block_n)
+    sqp, _ = _pad_to(jnp.asarray(sq, jnp.float32), 0, block_n)
+    want_words = rp.shape[0] // 32
+    wp = jnp.pad(mask_words,
+                 [(0, 0), (0, want_words - mask_words.shape[1])])
+    sp, _ = _pad_to(scope_ids, 0, block_q, value=0)
+    vals, ids = _multi_scope_topk_i8(qp, qsp, rp, rsp, sqp, wp, sp, k=k,
+                                     block_q=block_q, block_n=block_n,
+                                     metric=metric, interpret=interpret)
     return vals[:nq], ids[:nq]
 
 
@@ -149,5 +208,6 @@ def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
     return _flash_decode(q, kp, vp, mp, block_s=block_s, interpret=interpret)
 
 
-__all__ = ["scoped_topk", "multi_scope_topk", "ivf_gather_topk",
-           "mask_and_popcount", "bitmap_patch", "flash_decode", "ref"]
+__all__ = ["scoped_topk", "scoped_topk_i8", "multi_scope_topk",
+           "multi_scope_topk_i8", "ivf_gather_topk", "mask_and_popcount",
+           "bitmap_patch", "flash_decode", "ref"]

@@ -84,6 +84,67 @@ def ivf_gather_topk_ref(queries: np.ndarray, cand_rows: np.ndarray,
     return vals, ids.astype(np.int32)
 
 
+def _unpack_words_np(words: np.ndarray, n: int) -> np.ndarray:
+    """Numpy twin of :func:`unpack_words_ref` (little-endian bit j of word w
+    selects row w*32+j)."""
+    words = np.asarray(words, dtype=np.uint32)
+    bits = np.unpackbits(words.view(np.uint8), bitorder="little", axis=-1)
+    return bits.astype(bool)[..., :n]
+
+
+def _i8_scores_np(q_i8: np.ndarray, q_scale: np.ndarray, rows_i8: np.ndarray,
+                  row_scale: np.ndarray, sq: np.ndarray,
+                  metric: str) -> np.ndarray:
+    """(q, n) fp32 scores of the int8 scan contract: int32-accumulated dot of
+    the codes, the two symmetric scales multiplied back in, and (l2) the
+    dequantized-row squared norms subtracted — exact arithmetic for the
+    quantized operands (d * 127^2 << 2^31 never rounds in int32)."""
+    s32 = q_i8.astype(np.int32) @ rows_i8.astype(np.int32).T
+    scores = s32.astype(np.float32) * (
+        np.asarray(q_scale, np.float32)[:, None]
+        * np.asarray(row_scale, np.float32)[None, :])
+    if metric == "l2":
+        scores = 2.0 * scores - np.asarray(sq, np.float32)[None, :]
+    return scores
+
+
+def scoped_topk_i8_ref(q_i8: np.ndarray, q_scale: np.ndarray,
+                       rows_i8: np.ndarray, row_scale: np.ndarray,
+                       sq: np.ndarray, mask: np.ndarray,
+                       k: int = 10, metric: str = "ip"
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Unfused numpy oracle for the int8 scan phase of ``scoped_topk_i8``:
+    materializes the full (q, n) int32 score matrix, applies the scales,
+    masks, full stable sort. ``sq`` is read only for l2 (pass zeros/empty
+    padding-to-n for ip/cos)."""
+    scores = _i8_scores_np(q_i8, q_scale, rows_i8, row_scale, sq, metric)
+    scores = np.where(np.asarray(mask, bool)[None, :], scores, NEG_INF)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(scores, order, axis=1).astype(np.float32)
+    ids = np.where(vals <= NEG_INF, -1, order)
+    return vals, ids.astype(np.int32)
+
+
+def multi_scope_topk_i8_ref(q_i8: np.ndarray, q_scale: np.ndarray,
+                            rows_i8: np.ndarray, row_scale: np.ndarray,
+                            sq: np.ndarray, mask_words: np.ndarray,
+                            scope_ids: np.ndarray,
+                            k: int = 10, metric: str = "ip"
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Unfused numpy oracle for the heterogeneous-batch int8 scan: every
+    query row indirects through ``scope_ids`` into the packed (n_scopes,
+    ceil(n/32)) uint32 mask matrix, scores as :func:`scoped_topk_i8_ref`."""
+    n = rows_i8.shape[0]
+    scores = _i8_scores_np(q_i8, q_scale, rows_i8, row_scale, sq, metric)
+    masks = _unpack_words_np(mask_words, n)               # (n_scopes, n)
+    valid = masks[np.asarray(scope_ids, np.int64)]        # (q, n)
+    scores = np.where(valid, scores, NEG_INF)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(scores, order, axis=1).astype(np.float32)
+    ids = np.where(vals <= NEG_INF, -1, order)
+    return vals, ids.astype(np.int32)
+
+
 def mask_and_popcount_ref(a: jax.Array, b: jax.Array
                           ) -> Tuple[jax.Array, jax.Array]:
     words = a & b

@@ -127,6 +127,89 @@ def _multi_kernel(q_ref, x_ref, words_ref, sid_ref, vals_ref, ids_ref,
         ids_ref[...] = acc_i[...]
 
 
+def _kernel_i8(q_ref, qs_ref, x_ref, rs_ref, sq_ref, mask_ref,
+               vals_ref, ids_ref, acc_v, acc_i, *, k: int, block_n: int,
+               metric: str):
+    """int8 twin of :func:`_kernel`: the MXU accumulates the int8 codes in
+    int32 (``preferred_element_type=jnp.int32`` — exact, d * 127^2 << 2^31)
+    and the symmetric per-row scales multiply back in only at merge time, so
+    the streamed HBM->VMEM tile is a quarter of the fp32 bytes. The l2 term
+    streams the precomputed dequantized-row norms (``sq_ref``) instead of
+    recomputing them from the tile."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...]                                            # (block_q, d) i8
+    x = x_ref[...]                                            # (block_n, d) i8
+    s32 = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                     # (block_q, block_n)
+    scores = s32.astype(jnp.float32) * (
+        qs_ref[...][:, None] * rs_ref[...][None, :])
+    if metric == "l2":
+        scores = 2.0 * scores - sq_ref[...][None, :]
+    mask = mask_ref[...] != 0                                 # (block_n,)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    base = ni * block_n
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    ids = jnp.where(mask[None, :], ids, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
+def _multi_kernel_i8(q_ref, qs_ref, x_ref, rs_ref, sq_ref, words_ref, sid_ref,
+                     vals_ref, ids_ref, acc_v, acc_i, *, k: int, block_n: int,
+                     metric: str):
+    """int8 twin of :func:`_multi_kernel`: int32-accumulated int8 dot with
+    merge-time scales, packed scope-mask words expanded in-register exactly
+    as the fp32 kernel does."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...]                                            # (block_q, d) i8
+    x = x_ref[...]                                            # (block_n, d) i8
+    s32 = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    scores = s32.astype(jnp.float32) * (
+        qs_ref[...][:, None] * rs_ref[...][None, :])
+    if metric == "l2":
+        scores = 2.0 * scores - sq_ref[...][None, :]
+    words = words_ref[...]                                    # (n_scopes, bw)
+    sid = sid_ref[...]                                        # (block_q,)
+    qwords = jnp.take(words, sid, axis=0)                     # (block_q, bw)
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    qbits = jnp.take_along_axis(qwords, col >> 5, axis=1)
+    mask = (qbits >> (col & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = mask != 0                                          # (block_q, block_n)
+    scores = jnp.where(mask, scores, NEG_INF)
+    base = ni * block_n
+    ids = base + col
+    ids = jnp.where(mask, ids, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
 def _ivf_kernel(q_ref, x_ref, cid_ref, w_ref, vals_ref, ids_ref,
                 acc_v, acc_i, *, k: int, metric: str):
     """Batched-IVF back half: stream one query's probed candidate tiles
@@ -265,6 +348,114 @@ def multi_scope_topk(queries: jax.Array, rows: jax.Array,
         ],
         interpret=interpret,
     )(queries.astype(jnp.float32), rows, mask_words.astype(jnp.uint32),
+      scope_ids.astype(jnp.int32))
+    return vals, ids
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "metric", "interpret"))
+def scoped_topk_i8(q_i8: jax.Array, q_scale: jax.Array, rows_i8: jax.Array,
+                   row_scale: jax.Array, sq: jax.Array, mask: jax.Array,
+                   k: int = 10, block_q: int = 8, block_n: int = 1024,
+                   metric: str = "ip", interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Fused masked top-k over the int8 scalar-quantized store.
+
+    q_i8 (q, d) int8 quantized queries; q_scale (q,) f32; rows_i8 (n, d)
+    int8 codes; row_scale (n,) f32; sq (n,) f32 dequantized squared norms
+    (read only for l2 — pass zeros otherwise); mask (n,) int8/bool. Returns
+    (values (q, k) f32 descending, ids (q, k) int32; -1 = no candidate).
+    Same block-multiple preconditions as :func:`scoped_topk` (ops.py pads).
+    """
+    nq, d = q_i8.shape
+    n = rows_i8.shape[0]
+    assert nq % block_q == 0 and n % block_n == 0, (nq, n, block_q, block_n)
+    assert d % 128 == 0 or interpret, "lane-dim should be 128-aligned on TPU"
+    grid = (nq // block_q, n // block_n)
+    kernel = functools.partial(_kernel_i8, k=k, block_n=block_n,
+                               metric=metric)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q,), lambda qi, ni: (qi,)),
+            pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_i8.astype(jnp.int8), q_scale.astype(jnp.float32),
+      rows_i8.astype(jnp.int8), row_scale.astype(jnp.float32),
+      sq.astype(jnp.float32), mask.astype(jnp.int8))
+    return vals, ids
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "metric", "interpret"))
+def multi_scope_topk_i8(q_i8: jax.Array, q_scale: jax.Array,
+                        rows_i8: jax.Array, row_scale: jax.Array,
+                        sq: jax.Array, mask_words: jax.Array,
+                        scope_ids: jax.Array,
+                        k: int = 10, block_q: int = 8, block_n: int = 1024,
+                        metric: str = "ip", interpret: bool = True
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch heterogeneous masked top-k over the int8 store: the
+    packed-mask scope-id indirection of :func:`multi_scope_topk` with the
+    int8/int32 scoring of :func:`scoped_topk_i8`."""
+    nq, d = q_i8.shape
+    n = rows_i8.shape[0]
+    n_scopes, n_words = mask_words.shape
+    assert nq % block_q == 0 and n % block_n == 0, (nq, n, block_q, block_n)
+    assert block_n % 32 == 0 and n_words * 32 == n, (block_n, n_words, n)
+    assert d % 128 == 0 or interpret, "lane-dim should be 128-aligned on TPU"
+    grid = (nq // block_q, n // block_n)
+    bw = block_n // 32
+    kernel = functools.partial(_multi_kernel_i8, k=k, block_n=block_n,
+                               metric=metric)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q,), lambda qi, ni: (qi,)),
+            pl.BlockSpec((block_n, d), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+            pl.BlockSpec((n_scopes, bw), lambda qi, ni: (0, ni)),
+            pl.BlockSpec((block_q,), lambda qi, ni: (qi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_i8.astype(jnp.int8), q_scale.astype(jnp.float32),
+      rows_i8.astype(jnp.int8), row_scale.astype(jnp.float32),
+      sq.astype(jnp.float32), mask_words.astype(jnp.uint32),
       scope_ids.astype(jnp.int32))
     return vals, ids
 

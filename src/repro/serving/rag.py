@@ -44,6 +44,8 @@ class RAGConfig:
     token_budget: int = 512
     escalate_top: int = 3            # top hits get L2 bodies
     executor: str = "flat"
+    precision: str = "fp32"          # "int8": two-phase quantized ranking
+    rescore_k: Optional[int] = None  # int8-phase candidates (default 4k)
 
 
 class ContextDatabase:
@@ -82,10 +84,15 @@ class ContextDatabase:
         N independent resolve+launch round-trips. With
         ``cfg.executor == "sharded"`` the shared scan launch runs on the
         row-sharded device mesh (bit-identical results; the per-shard
-        byte/collective accounting is surfaced in the stats)."""
+        byte/collective accounting is surfaced in the stats). With
+        ``cfg.precision == "int8"`` the ranking runs the two-phase
+        quantized plan (4x smaller device store; the int8/fp32 byte split
+        and rescored candidate counts are surfaced in the stats)."""
         results = self.db.dsq_batch(np.atleast_2d(query_vecs), list(scopes),
                                     k=cfg.k, recursive=recursive,
-                                    exclude=exclude, executor=cfg.executor)
+                                    exclude=exclude, executor=cfg.executor,
+                                    precision=cfg.precision,
+                                    rescore_k=cfg.rescore_k)
         out = []
         for res in results:
             hits = [self.payloads[int(i)] for i in res.ids[0] if int(i) >= 0]
@@ -96,6 +103,10 @@ class ContextDatabase:
                 stats["n_shards"] = res.batch.n_shards
                 stats["shard_mask_bytes"] = res.batch.shard_mask_bytes
                 stats["collective_bytes"] = res.batch.collective_bytes
+            if res.batch is not None and res.batch.db_bytes_int8:
+                stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
+                stats["db_bytes_int8"] = res.batch.db_bytes_int8
+                stats["rescore_candidates"] = res.batch.rescore_candidates
             out.append((hits, stats))
         return out
 

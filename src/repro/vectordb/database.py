@@ -22,6 +22,7 @@ from .flat import FlatExecutor
 from .graph import PGIndex
 from .ivf import IVFIndex
 from .planner import BatchAccounting, BatchPlanner, ScopeMaskCache
+from .quant import resolve_rescore_k
 from .sharded import ShardedExecutor
 from .store import VectorStore
 
@@ -141,7 +142,14 @@ class DirectoryVectorDB:
     def dsq(self, queries: np.ndarray, path: str, k: int = 10,
             recursive: bool = True, exclude: Sequence[str] = (),
             namespace: str = DEFAULT_NS, executor: str = "flat",
+            precision: str = "fp32", rescore_k: Optional[int] = None,
             **executor_params) -> DSQResult:
+        """``precision="int8"`` runs the executor's two-phase quantized plan
+        (int8 scan/gather keeps ``rescore_k >= k`` candidates, exact fp32
+        gather-rescore ranks the final top-k). The default fp32 path is
+        byte-for-byte the pre-knob behavior."""
+        if precision not in ("fp32", "int8"):
+            raise ValueError(f"precision {precision!r} not in (fp32, int8)")
         idx = self.namespaces[namespace]
         stats = ResolveStats()
         t0 = time.perf_counter_ns()
@@ -157,6 +165,7 @@ class DirectoryVectorDB:
             raise ValueError(f"executor {executor!r} not built "
                              f"(have {sorted(self.executors)})")
         scores, ids = ex.search(queries, k, candidate_ids=candidate_ids,
+                                precision=precision, rescore_k=rescore_k,
                                 **executor_params)
         t2 = time.perf_counter_ns()
         return DSQResult(ids=ids, scores=scores, scope_size=len(candidate_ids),
@@ -177,7 +186,8 @@ class DirectoryVectorDB:
                   k: int = 10, recursive=True,
                   exclude: Optional[Sequence[Sequence[str]]] = None,
                   namespace: str = DEFAULT_NS, executor: str = "flat",
-                  use_pallas: bool = False,
+                  use_pallas: bool = False, precision: str = "fp32",
+                  rescore_k: Optional[int] = None,
                   **executor_params) -> List[DSQResult]:
         """Batched multi-scope DSQ: one request per row of ``queries`` with
         its own anchor (and optionally its own ``recursive`` flag and
@@ -198,7 +208,16 @@ class DirectoryVectorDB:
         ``sharded`` ranks every scan-plan request in one shard_map launch
         over the row-sharded device mesh (bit-identical to ``flat``). The
         per-request fallback loop remains only for executor params the
-        planner cannot plan."""
+        planner cannot plan.
+
+        ``precision="int8"`` makes precision a *planned* dimension: the
+        BatchPlanner marks each scope group int8 or fp32 (scan groups
+        quantize; gather groups only when they outsize the rescore window),
+        int8 scan groups share one quantized-store launch plus one exact
+        fp32 gather-rescore, and ``DSQResult.batch`` reports the fp32/int8
+        store bytes and rescored candidate counts."""
+        if precision not in ("fp32", "int8"):
+            raise ValueError(f"precision {precision!r} not in (fp32, int8)")
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         B = queries.shape[0]
         if len(paths) != B:
@@ -212,14 +231,17 @@ class DirectoryVectorDB:
         if isinstance(ex, IVFIndex) and set(executor_params) <= {"nprobe"}:
             return self._dsq_batch_ivf(ex, queries, paths, k, recursive,
                                        exclude, namespace, use_pallas,
-                                       executor_params.get("nprobe", 8))
+                                       executor_params.get("nprobe", 8),
+                                       precision, rescore_k)
         if isinstance(ex, PGIndex) and set(executor_params) <= {"ef_search"}:
             return self._dsq_batch_pg(ex, queries, paths, k, recursive,
                                       exclude, namespace,
-                                      executor_params.get("ef_search", 64))
+                                      executor_params.get("ef_search", 64),
+                                      precision, rescore_k)
         if isinstance(ex, ShardedExecutor) and not executor_params:
             return self._dsq_batch_sharded(ex, queries, paths, k, recursive,
-                                           exclude, namespace, use_pallas)
+                                           exclude, namespace, use_pallas,
+                                           precision, rescore_k)
         if not isinstance(ex, FlatExecutor) or executor_params:
             # explicit executor params the planner cannot plan (e.g. a forced
             # plan="scan") must reach the executor exactly as the per-request
@@ -227,42 +249,59 @@ class DirectoryVectorDB:
             # executor
             return self._dsq_batch_fallback(queries, paths, k, recursive,
                                             exclude, namespace, executor,
+                                            precision=precision,
+                                            rescore_k=rescore_k,
                                             **executor_params)
 
         def launch_flat(groups, out_scores, out_ids, acct):
             self._launch_gather(ex, queries, k, groups, out_scores, out_ids,
-                                acct)
-            # ONE launch for every scan-plan request in the batch
-            scan_groups = [g for g in groups if g.plan == "scan"]
-            if scan_groups:
+                                acct, rescore_k)
+            # ONE launch per precision for every scan-plan request in the
+            # batch (a pure-fp32 or pure-int8 batch stays one launch)
+            for prec in ("fp32", "int8"):
+                scan_groups = [g for g in groups
+                               if g.plan == "scan" and g.precision == prec]
+                if not scan_groups:
+                    continue
                 words = np.stack([g.words for g in scan_groups])
                 rows, sids = self._scan_assembly(scan_groups)
                 s, i = ex.search_multi(queries[rows], words, sids, k,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas, precision=prec,
+                                       rescore_k=rescore_k)
                 out_scores[rows] = s
                 out_ids[rows] = i
                 acct.launches += 1
+                if prec == "int8":
+                    acct.rescore_candidates += len(rows) * resolve_rescore_k(
+                        k, rescore_k, len(self.store))
 
         return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
-                                       namespace, launch_flat)
+                                       namespace, launch_flat,
+                                       precision=precision,
+                                       rescore_k=rescore_k)
 
     @staticmethod
     def _launch_gather(flat_ex, queries, k, groups, out_scores, out_ids,
-                       acct) -> None:
+                       acct, rescore_k=None) -> None:
         """One gather launch per selective group — shared by the flat and
         sharded batch paths (the sharded tier delegates selective scopes to
         the identical single-device gather, which is what keeps it
-        bit-identical to flat there)."""
+        bit-identical to flat there). Each group runs at its planner-chosen
+        precision: int8 only when the scope outsizes the rescore window."""
         for g in groups:
             if g.plan != "gather":
                 continue
             rows = np.asarray(g.request_idx)
             s, i = flat_ex.search(queries[rows], k,
                                   candidate_ids=g.candidate_ids,
-                                  plan="gather")
+                                  plan="gather", precision=g.precision,
+                                  rescore_k=rescore_k)
             out_scores[rows] = s
             out_ids[rows] = i
             acct.launches += 1
+            if g.precision == "int8":
+                acct.rescore_candidates += len(rows) * resolve_rescore_k(
+                    k, rescore_k, g.scope_size)
 
     @staticmethod
     def _scan_assembly(scan_groups) -> Tuple[np.ndarray, np.ndarray]:
@@ -274,25 +313,34 @@ class DirectoryVectorDB:
         return np.asarray(rows), np.asarray(sids, np.int32)
 
     def _dsq_batch_planned(self, queries, paths, k, recursive, exclude,
-                           namespace, launch, label: Optional[str] = None
+                           namespace, launch, label: Optional[str] = None,
+                           precision: str = "fp32",
+                           rescore_k: Optional[int] = None
                            ) -> List[DSQResult]:
         """Shared batch driver: normalize → plan (cache-first) → timed
         executor launches via ``launch(groups, out_scores, out_ids, acct)``
         → per-request result assembly. Every planned executor path (flat,
-        ivf, pg) differs only in its launch callback."""
+        ivf, pg) differs only in its launch callback (which also accounts
+        its own ``rescore_candidates`` — the int8-phase survivor count is
+        executor-specific: scan depth for flat/sharded, probe-window-capped
+        for ivf, ef-widened for pg)."""
         B = queries.shape[0]
         idx = self.namespaces[namespace]
         acct = BatchAccounting()
         t0 = time.perf_counter_ns()
         specs = normalize_batch(paths, recursive, exclude)
         groups = self.planner(namespace).plan(
-            idx, len(self.store), specs, k, acct)
+            idx, len(self.store), specs, k, acct, precision=precision,
+            rescore_k=rescore_k)
         t1 = time.perf_counter_ns()
         acct.directory_ns = t1 - t0
         out_scores = np.full((B, k), -np.inf, np.float32)
         out_ids = np.full((B, k), -1, np.int64)
         launch(groups, out_scores, out_ids, acct)
         acct.ann_ns = time.perf_counter_ns() - t1
+        if any(g.precision == "int8" for g in groups):
+            acct.db_bytes_fp32 = self.store.nbytes()
+            acct.db_bytes_int8 = self.store.q_nbytes()
 
         plan_of = {}
         for g in groups:
@@ -312,7 +360,8 @@ class DirectoryVectorDB:
         return results
 
     def _dsq_batch_sharded(self, ex, queries, paths, k, recursive, exclude,
-                           namespace, use_pallas=False) -> List[DSQResult]:
+                           namespace, use_pallas=False, precision="fp32",
+                           rescore_k=None) -> List[DSQResult]:
         """Batched DSQ on the sharded serving tier: unique scopes resolve
         once (cache-first), scan-plan groups pin their packed words into the
         executor's device-resident scope table (token-validated — repeated
@@ -324,16 +373,19 @@ class DirectoryVectorDB:
         launch has no fused-kernel variant."""
 
         def launch_sharded(groups, out_scores, out_ids, acct):
-            db0 = ex.view.db_bytes_uploaded
+            db0 = ex.view.db_bytes_uploaded + ex.view.q_bytes_uploaded
             m0 = ex.mask_bytes_uploaded
             self._launch_gather(ex.flat, queries, k, groups, out_scores,
-                                out_ids, acct)
+                                out_ids, acct, rescore_k)
             scan_groups = [g for g in groups if g.plan == "scan"]
             if scan_groups:
+                # the precision knob is batch-level, so every scan group in
+                # the batch carries the same planner-chosen precision
+                prec = scan_groups[0].precision
                 # only the mesh path reads the device mirror — a gather-only
                 # batch never pays the store upload
                 ex.sync()
-                if ex.scan_on_mesh(k):
+                if ex.scan_on_mesh(k, prec, rescore_k):
                     ex.reserve(len(scan_groups))
                     rows, sids = [], []
                     for g in scan_groups:
@@ -343,28 +395,45 @@ class DirectoryVectorDB:
                         sids.extend([slot] * len(g.request_idx))
                     rows = np.asarray(rows)
                     s, i = ex.search_slots(queries[rows],
-                                           np.asarray(sids, np.int32), k)
-                    acct.collective_bytes += (ex.n_shards * len(rows) * k * 8)
+                                           np.asarray(sids, np.int32), k,
+                                           precision=prec,
+                                           rescore_k=rescore_k)
+                    # the merge collective carries k triples on the fp32
+                    # scan, rescore_k candidate triples on the int8 scan
+                    depth = ex.phase_depth(k, prec, rescore_k)
+                    acct.collective_bytes += (ex.n_shards * len(rows)
+                                              * depth * 8)
+                    if prec == "int8":
+                        acct.rescore_candidates += len(rows) * depth
                 else:
                     # store too small for a k-deep per-shard top-k: the
                     # single-device flat twin is bit-identical by definition
+                    # (fp32) / runs the identical two-phase plan (int8)
                     words = np.stack([g.words for g in scan_groups])
                     rows, sids = self._scan_assembly(scan_groups)
                     s, i = ex.flat.search_multi(queries[rows], words, sids,
-                                                k, use_pallas=use_pallas)
+                                                k, use_pallas=use_pallas,
+                                                precision=prec,
+                                                rescore_k=rescore_k)
+                    if prec == "int8":
+                        acct.rescore_candidates += len(rows) * (
+                            resolve_rescore_k(k, rescore_k, len(self.store)))
                 out_scores[rows] = s
                 out_ids[rows] = i
                 acct.launches += 1
             acct.n_shards = ex.n_shards
-            acct.shard_db_bytes += ex.view.db_bytes_uploaded - db0
+            acct.shard_db_bytes += (ex.view.db_bytes_uploaded
+                                    + ex.view.q_bytes_uploaded - db0)
             acct.shard_mask_bytes += ex.mask_bytes_uploaded - m0
 
         return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
                                        namespace, launch_sharded,
-                                       label="sharded")
+                                       label="sharded", precision=precision,
+                                       rescore_k=rescore_k)
 
     def _dsq_batch_ivf(self, ex, queries, paths, k, recursive, exclude,
-                       namespace, use_pallas, nprobe) -> List[DSQResult]:
+                       namespace, use_pallas, nprobe, precision="fp32",
+                       rescore_k=None) -> List[DSQResult]:
         """Batched IVF DSQ: unique scopes resolve once through the
         epoch-validated mask cache, their packed words stack into one mask
         matrix, and all requests sharing an ``nprobe`` ride ONE fused
@@ -387,23 +456,39 @@ class DirectoryVectorDB:
             if not live:
                 return
             words = np.stack([g.words for g in live])
-            req = [(i, si) for si, g in enumerate(live)
+            req = [(i, si, g.precision) for si, g in enumerate(live)
                    for i in g.request_idx]
-            for val in sorted({npr[i] for i, _ in req}):
-                rows = np.asarray([i for i, _ in req if npr[i] == val])
-                sids = np.asarray([si for i, si in req if npr[i] == val],
-                                  np.int32)
-                s, i = ex.search_multi(queries[rows], words, sids, k,
-                                       nprobe=val, use_pallas=use_pallas)
-                out_scores[rows] = s
-                out_ids[rows] = i
-                acct.launches += 1
+            for val in sorted({npr[i] for i, _, _ in req}):
+                for prec in ("fp32", "int8"):
+                    rows = np.asarray([i for i, _, p in req
+                                       if npr[i] == val and p == prec])
+                    if rows.size == 0:
+                        continue
+                    sids = np.asarray([si for i, si, p in req
+                                       if npr[i] == val and p == prec],
+                                      np.int32)
+                    s, i = ex.search_multi(queries[rows], words, sids, k,
+                                           nprobe=val, use_pallas=use_pallas,
+                                           precision=prec,
+                                           rescore_k=rescore_k)
+                    out_scores[rows] = s
+                    out_ids[rows] = i
+                    acct.launches += 1
+                    if prec == "int8":
+                        # the int8 phase is capped at the probed window
+                        window = val * ex.layout().max_aligned
+                        acct.rescore_candidates += len(rows) * min(
+                            resolve_rescore_k(k, rescore_k, len(self.store)),
+                            window)
 
         return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
-                                       namespace, launch_ivf, label="ivf")
+                                       namespace, launch_ivf, label="ivf",
+                                       precision=precision,
+                                       rescore_k=rescore_k)
 
     def _dsq_batch_pg(self, ex, queries, paths, k, recursive, exclude,
-                      namespace, ef_search) -> List[DSQResult]:
+                      namespace, ef_search, precision="fp32",
+                      rescore_k=None) -> List[DSQResult]:
         """Batched PG DSQ: unique scopes resolve once (cache-first), each
         group's dense bool mask is built once and shared by every request in
         the group — one ``search_batch`` call per unique scope."""
@@ -418,16 +503,26 @@ class DirectoryVectorDB:
                     valid = valid & alive
                 rows = np.asarray(g.request_idx)
                 s, i = ex.search_batch(queries[rows], k, valid_mask=valid,
-                                       ef_search=ef_search)
+                                       ef_search=ef_search,
+                                       precision=g.precision,
+                                       rescore_k=rescore_k)
                 out_scores[rows] = s
                 out_ids[rows] = i
                 acct.launches += 1
+                if g.precision == "int8":
+                    # the quantized beam collects max(ef, window) per query
+                    acct.rescore_candidates += len(rows) * max(
+                        ef_search,
+                        resolve_rescore_k(k, rescore_k, len(self.store)))
 
         return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
-                                       namespace, launch_pg, label="pg")
+                                       namespace, launch_pg, label="pg",
+                                       precision=precision,
+                                       rescore_k=rescore_k)
 
     def _dsq_batch_fallback(self, queries, paths, k, recursive, exclude,
-                            namespace, executor, **executor_params
+                            namespace, executor, precision="fp32",
+                            rescore_k=None, **executor_params
                             ) -> List[DSQResult]:
         """Shared resolution, per-request executor calls: repeated scopes
         still resolve once (``resolve_batch`` + shared ``to_array``), then
@@ -448,6 +543,7 @@ class DirectoryVectorDB:
             if ids_arr is None:
                 ids_arr = cand[id(scope)] = scope.to_array()
             scores, ids = ex.search(queries[i], k, candidate_ids=ids_arr,
+                                    precision=precision, rescore_k=rescore_k,
                                     **executor_params)
             out.append(DSQResult(
                 ids=ids, scores=scores, scope_size=len(ids_arr),

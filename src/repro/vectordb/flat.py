@@ -8,6 +8,13 @@ vector databases do (pre- vs post-filter):
 * ``scan``: score all N rows on the MXU-friendly path and mask invalid lanes
   to -inf — optimal for broad scopes, and the shape the Pallas ``scoped_topk``
   kernel implements on TPU.
+
+Both plans additionally come in two *precisions*: the default exact fp32
+path, and the int8 scalar-quantized two-phase path (``precision="int8"``):
+the int8 scan/gather reads the quarter-size quantized store to select
+``rescore_k >= k`` candidates, then :func:`gather_rescore` ranks exactly
+those candidates in exact fp32 — so the final scores are always true fp32
+scores and the only approximation is which candidates survive phase 1.
 """
 from __future__ import annotations
 
@@ -19,7 +26,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .store import VectorStore
+from .quant import int_exact_dot, quantize_rows, resolve_rescore_k
+from .store import VectorStore, pack_ids_to_words
 
 GATHER_THRESHOLD = 0.05   # use gather plan below this scope selectivity
 
@@ -47,34 +55,142 @@ def pad_topk(scores: np.ndarray, ids: np.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
-def _scan_topk(queries: jnp.ndarray, rows: jnp.ndarray, mask: jnp.ndarray,
+def _scan_topk(queries: jnp.ndarray, rows: jnp.ndarray, sq: jnp.ndarray,
+               words: jnp.ndarray,
                k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-scope scan over a packed uint32 word mask (ceil(n/32) words,
+    unpacked in-register — 32x less host->device mask traffic than the old
+    dense bool hand-off). ``sq`` is the store's cached device squared norms,
+    read only on the (trace-time static) l2 branch — pass a zero-length
+    array for ip/cos."""
+    from ..kernels.ref import unpack_words_ref
+    n = rows.shape[0]
     if metric in ("ip", "cos"):
         scores = queries @ rows.T
     else:  # l2: argmax of -(||q||^2 - 2 q.x + ||x||^2) == argmax(2 q.x - ||x||^2)
-        scores = 2.0 * (queries @ rows.T) - jnp.sum(rows * rows, axis=-1)[None, :]
+        scores = 2.0 * (queries @ rows.T) - sq[None, :]
+    mask = unpack_words_ref(words, n)                       # (n,)
     scores = jnp.where(mask[None, :], scores, -jnp.inf)
     return jax.lax.top_k(scores, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
 def _multi_scan_topk(queries: jnp.ndarray, rows: jnp.ndarray,
-                     mask_words: jnp.ndarray, scope_ids: jnp.ndarray,
+                     sq: jnp.ndarray, mask_words: jnp.ndarray,
+                     scope_ids: jnp.ndarray,
                      k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Heterogeneous-batch scan: one launch ranks every scan-plan request in
     the batch. Each query row indirects through ``scope_ids`` into a packed
     (n_scopes, ceil(n/32)) uint32 mask matrix, unpacked in-register on
-    device (the jnp twin of the Pallas ``multi_scope_topk`` kernel)."""
+    device (the jnp twin of the Pallas ``multi_scope_topk`` kernel). ``sq``
+    is the cached device squared-norm vector, l2-only like in
+    :func:`_scan_topk` (both paths must share it for batch==loop
+    bit-identity)."""
     from ..kernels.ref import unpack_words_ref
     n = rows.shape[0]
     if metric in ("ip", "cos"):
         scores = queries @ rows.T
     else:
-        scores = 2.0 * (queries @ rows.T) - jnp.sum(rows * rows, axis=-1)[None, :]
+        scores = 2.0 * (queries @ rows.T) - sq[None, :]
     masks = unpack_words_ref(mask_words, n)                 # (n_scopes, n)
     valid = jnp.take(masks, scope_ids, axis=0)              # (B, n)
     scores = jnp.where(valid, scores, -jnp.inf)
     return jax.lax.top_k(scores, k)
+
+
+# (q, d) x (n, d) int8 code dot as fp32 — see quant.int_exact_dot, the
+# single shared definition every int8 jnp twin scores through
+_int_exact_dot = int_exact_dot
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _scan_topk_i8(q_i8: jnp.ndarray, q_scale: jnp.ndarray,
+                  rows_i8: jnp.ndarray, row_scale: jnp.ndarray,
+                  sq: jnp.ndarray, words: jnp.ndarray,
+                  k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp twin of the Pallas ``scoped_topk_i8`` kernel: int8-code scan of
+    the quantized store, symmetric scales applied after accumulation, packed
+    word mask. ``sq`` holds the *dequantized-row* squared norms (l2 only)."""
+    from ..kernels.ref import unpack_words_ref
+    n = rows_i8.shape[0]
+    scores = _int_exact_dot(q_i8, rows_i8) * (
+        q_scale[:, None] * row_scale[None, :])
+    if metric == "l2":
+        scores = 2.0 * scores - sq[None, :]
+    mask = unpack_words_ref(words, n)
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _multi_scan_topk_i8(q_i8: jnp.ndarray, q_scale: jnp.ndarray,
+                        rows_i8: jnp.ndarray, row_scale: jnp.ndarray,
+                        sq: jnp.ndarray, mask_words: jnp.ndarray,
+                        scope_ids: jnp.ndarray,
+                        k: int, metric: str
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp twin of the Pallas ``multi_scope_topk_i8`` kernel (heterogeneous
+    scope batch over the int8 store)."""
+    from ..kernels.ref import unpack_words_ref
+    n = rows_i8.shape[0]
+    scores = _int_exact_dot(q_i8, rows_i8) * (
+        q_scale[:, None] * row_scale[None, :])
+    if metric == "l2":
+        scores = 2.0 * scores - sq[None, :]
+    masks = unpack_words_ref(mask_words, n)
+    valid = jnp.take(masks, scope_ids, axis=0)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _gather_topk_i8(q_i8: jnp.ndarray, q_scale: jnp.ndarray,
+                    cand_i8: jnp.ndarray, cand_scale: jnp.ndarray,
+                    cand_sq: jnp.ndarray,
+                    k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 phase of the gather plan: score only the |C| candidate codes."""
+    scores = _int_exact_dot(q_i8, cand_i8) * (
+        q_scale[:, None] * cand_scale[None, :])
+    if metric == "l2":
+        scores = 2.0 * scores - cand_sq[None, :]
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _rescore_topk(queries: jnp.ndarray, cand_rows: jnp.ndarray,
+                  valid: jnp.ndarray,
+                  k: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Phase 2 of the int8 plan: exact fp32 scores of per-query gathered
+    candidate rows (B, R, d), invalid (-1 padded) lanes masked to -inf."""
+    scores = jax.lax.dot_general(
+        cand_rows, queries, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                   # (B, R)
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.sum(cand_rows * cand_rows, axis=-1)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+def gather_rescore(store: VectorStore, queries: np.ndarray,
+                   cand_ids: np.ndarray, k: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact fp32 gather-rescore of int8-phase candidates — the shared back
+    half of every two-phase executor path (flat scan/gather, IVF, sharded
+    post-merge). ``cand_ids`` is (B, R) int64 store ids with -1 padding;
+    returns (scores, ids) both (B, k), -1/-inf padded."""
+    queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+    cand_ids = np.asarray(cand_ids, dtype=np.int64)
+    # block-padding rows surfaced by stray mask tail bits are not real rows
+    cand_ids = np.where(cand_ids < len(store), cand_ids, -1)
+    rows = store.vectors[np.maximum(cand_ids, 0)]            # (B, R, d)
+    kk = min(k, cand_ids.shape[1])
+    vals, loc = _rescore_topk(jnp.asarray(queries), jnp.asarray(rows),
+                              jnp.asarray(cand_ids >= 0), kk, store.metric)
+    vals = np.asarray(vals, dtype=np.float32)
+    ids = np.take_along_axis(cand_ids, np.asarray(loc, dtype=np.int64),
+                             axis=1)
+    ids[~np.isfinite(vals)] = -1
+    return pad_topk(vals, ids, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
@@ -100,11 +216,27 @@ class FlatExecutor:
     def __init__(self, store: VectorStore):
         self.store = store
 
+    def _sq(self) -> jnp.ndarray:
+        """Cached device squared norms for the l2 scan — an empty array for
+        ip/cos, so the O(n) transfer is never paid on the branch that does
+        not read it (the sq term is trace-time static)."""
+        return (self.store.device_sq_norms()
+                if self.store.metric == "l2" else jnp.zeros(0, jnp.float32))
+
+    def _q_sq(self) -> jnp.ndarray:
+        """int8-tier counterpart of :meth:`_sq` (dequantized-row norms)."""
+        return (self.store.device_q_sq_norms()
+                if self.store.metric == "l2" else jnp.zeros(0, jnp.float32))
+
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
-               plan: Optional[str] = None
+               plan: Optional[str] = None, precision: str = "fp32",
+               rescore_k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
-        """Returns (scores, ids), both (q, k); ids == -1 past the scope size."""
+        """Returns (scores, ids), both (q, k); ids == -1 past the scope size.
+        ``precision="int8"`` runs the two-phase plan (int8 scan/gather keeps
+        ``rescore_k`` candidates, exact fp32 rescore ranks the final k);
+        the default fp32 path is untouched by the knob."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         n = len(self.store)
         if candidate_ids is None:
@@ -116,6 +248,13 @@ class FlatExecutor:
                     np.full((q, k), -1, np.int64))
         if plan is None:
             plan = choose_plan(m, n, k)
+        if precision == "int8":
+            r = resolve_rescore_k(k, rescore_k, m)
+            # a gather scope the rescore window covers entirely gains nothing
+            # from an int8 phase — the exact fp32 gather IS the planned
+            # precision for it (the same rule BatchPlanner applies per group)
+            if not (plan == "gather" and m <= r):
+                return self._search_int8(queries, k, candidate_ids, plan, r)
         kk = min(k, m)
         if plan == "gather":
             cand_rows = self.store.vectors[candidate_ids]
@@ -124,17 +263,47 @@ class FlatExecutor:
                 self.store.metric)
             ids = candidate_ids[np.asarray(local)]
         else:
-            mask = np.zeros(n, dtype=bool)
-            mask[candidate_ids] = True
+            words = pack_ids_to_words(candidate_ids, n)
             scores, ids = _scan_topk(
                 jnp.asarray(queries), self.store.device_vectors(),
-                jnp.asarray(mask), kk, self.store.metric)
+                self._sq(), jnp.asarray(words), kk, self.store.metric)
             ids = np.asarray(ids)
         return pad_topk(np.asarray(scores), ids, k)
 
+    def _search_int8(self, queries: np.ndarray, k: int,
+                     candidate_ids: np.ndarray, plan: str, r: int
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Two-phase int8 path of :meth:`search` (r = effective rescore_k)."""
+        n = len(self.store)
+        q_i8, q_s = quantize_rows(queries)
+        if plan == "gather":
+            cand_i8 = self.store.q_vectors[candidate_ids]
+            cand_sc = self.store.q_scales[candidate_ids]
+            cand_sq = (self.store.q_sq_norms()[candidate_ids]
+                       if self.store.metric == "l2"
+                       else np.zeros(0, np.float32))
+            _, local = _gather_topk_i8(
+                jnp.asarray(q_i8), jnp.asarray(q_s), jnp.asarray(cand_i8),
+                jnp.asarray(cand_sc), jnp.asarray(cand_sq), r,
+                self.store.metric)
+            cand = np.asarray(candidate_ids, np.int64)[np.asarray(local)]
+        else:
+            words = pack_ids_to_words(candidate_ids, n)
+            vals, cand = _scan_topk_i8(
+                jnp.asarray(q_i8), jnp.asarray(q_s),
+                self.store.device_q_vectors(), self.store.device_q_scales(),
+                self._q_sq(), jnp.asarray(words), min(r, n),
+                self.store.metric)
+            cand = np.asarray(cand, dtype=np.int64)
+            # top_k hands exhausted (-inf) lanes arbitrary column ids — they
+            # are out-of-scope rows and must not reach the rescore
+            cand[~np.isfinite(np.asarray(vals))] = -1
+        return gather_rescore(self.store, queries, cand, k)
+
     def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
                      scope_ids: np.ndarray, k: int,
-                     use_pallas: bool = False
+                     use_pallas: bool = False, precision: str = "fp32",
+                     rescore_k: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """One launch for a heterogeneous scan-plan batch: queries (B, d),
         packed masks (n_scopes, ceil(n/32)), per-query scope row ids (B,).
@@ -143,9 +312,14 @@ class FlatExecutor:
         keeps results bit-identical to the per-request scan path on every
         backend; pass ``use_pallas=True`` on real TPUs for the fused kernel
         (same top-k set, but tie order/low score bits may differ from the
-        unfused jax.lax.top_k)."""
+        unfused jax.lax.top_k). ``precision="int8"`` swaps phase 1 to the
+        quantized-store scan (``multi_scope_topk_i8`` fused, or its jnp
+        twin) and finishes with the shared exact fp32 rescore."""
         from ..kernels import ops as kops
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        if precision == "int8":
+            return self._search_multi_int8(queries, mask_words, scope_ids,
+                                           k, use_pallas, rescore_k)
         if use_pallas:
             scores, ids = kops.multi_scope_topk(
                 queries, self.store.device_vectors(), mask_words,
@@ -153,10 +327,39 @@ class FlatExecutor:
         else:
             scores, ids = _multi_scan_topk(
                 jnp.asarray(queries), self.store.device_vectors(),
-                jnp.asarray(mask_words, dtype=jnp.uint32),
+                self._sq(), jnp.asarray(mask_words, dtype=jnp.uint32),
                 jnp.asarray(scope_ids, dtype=jnp.int32), k,
                 self.store.metric)
         scores = np.asarray(scores)
         ids = np.asarray(ids, dtype=np.int64)
         ids[~np.isfinite(scores)] = -1
         return scores, ids
+
+    def _search_multi_int8(self, queries, mask_words, scope_ids, k,
+                           use_pallas, rescore_k
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        from ..kernels import ops as kops
+        n = len(self.store)
+        r = resolve_rescore_k(k, rescore_k, n)
+        q_i8, q_s = quantize_rows(queries)
+        if use_pallas:
+            # the kernel streams the sq tile unconditionally; hand it a
+            # device zeros vector on the metrics that never read it
+            sq = (self.store.device_q_sq_norms()
+                  if self.store.metric == "l2" else jnp.zeros(n, jnp.float32))
+            vals, cand = kops.multi_scope_topk_i8(
+                q_i8, q_s, self.store.device_q_vectors(),
+                self.store.device_q_scales(), sq, mask_words, scope_ids,
+                k=r, metric=self.store.metric)
+        else:
+            vals, cand = _multi_scan_topk_i8(
+                jnp.asarray(q_i8), jnp.asarray(q_s),
+                self.store.device_q_vectors(), self.store.device_q_scales(),
+                self._q_sq(), jnp.asarray(mask_words, dtype=jnp.uint32),
+                jnp.asarray(scope_ids, dtype=jnp.int32), r,
+                self.store.metric)
+        cand = np.asarray(cand, dtype=np.int64)
+        # exhausted (-inf) lanes carry arbitrary top_k column ids (the fused
+        # kernel already yields -1); mask them out of the rescore
+        cand[~np.isfinite(np.asarray(vals))] = -1
+        return gather_rescore(self.store, queries, cand, k)

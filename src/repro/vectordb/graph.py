@@ -8,6 +8,7 @@ exactly the PG latency-vs-depth trend of Fig. 11.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 from typing import Optional, Tuple
 
@@ -50,6 +51,19 @@ class PGIndex:
             return -(rows @ q)                       # smaller = closer
         diff = rows - q
         return np.einsum("nd,nd->n", diff, diff)
+
+    def _distances_i8(self, q_i8f: np.ndarray, q_scale: float,
+                      ids: np.ndarray) -> np.ndarray:
+        """Quantized traversal distances: the int8 codes of the visited rows
+        dot the quantized query (f32 arithmetic on integer values — exact,
+        see ``flat._int_exact_dot``), scales multiplied back in. Ranking is
+        what the beam needs, so l2 uses the same ``||q||^2``-free identity
+        as the scan (plus the dequantized-row norms)."""
+        rows = self.store.q_vectors[ids].astype(np.float32)
+        s = (rows @ q_i8f) * (self.store.q_scales[ids] * q_scale)
+        if self.store.metric in ("ip", "cos"):
+            return -s
+        return self.store.q_sq_norms()[ids] - 2.0 * s
 
     def _build(self) -> None:
         n = len(self.store)
@@ -131,18 +145,22 @@ class PGIndex:
     # ----------------------------------------------------------------- search
     def _beam(self, q: np.ndarray, entry: int, ef: int,
               limit_ids: Optional[int] = None, inserted: bool = False,
-              valid_mask: Optional[np.ndarray] = None, k: Optional[int] = None
-              ) -> Tuple[np.ndarray, int]:
+              valid_mask: Optional[np.ndarray] = None, k: Optional[int] = None,
+              dist_fn=None) -> Tuple[np.ndarray, int]:
         """Best-first beam search; returns (ids best-first, hops). When
         ``valid_mask`` is given, only valid ids enter the *result* heap but all
         nodes are traversable (mask-aware post-collection). Per-hop neighbor
         filtering and scoring are vectorized (visited is the reusable
-        generation-stamped mask, distances one batched call per hop)."""
+        generation-stamped mask, distances one batched call per hop).
+        ``dist_fn`` overrides the distance function (ids -> distances);
+        the int8 search path passes the quantized-store scorer."""
+        if dist_fn is None:
+            dist_fn = lambda ids: self._distances(q, ids)
         self._gen += 1
         gen = self._gen
         visit_gen = self._visit_gen
         visit_gen[entry] = gen
-        d0 = float(self._distances(q, np.asarray([entry]))[0])
+        d0 = float(dist_fn(np.asarray([entry]))[0])
         frontier = [(d0, entry)]                       # min-heap by distance
         # result: max-heap of (−distance, id), only scope-valid ids
         result: list = []
@@ -162,7 +180,7 @@ class PGIndex:
             if nbrs.size == 0:
                 continue
             visit_gen[nbrs] = gen
-            dists = self._distances(q, nbrs)
+            dists = dist_fn(nbrs)
             check = None if valid_mask is None else valid_mask[nbrs]
             for j, (nb, dist) in enumerate(zip(nbrs.tolist(), dists.tolist())):
                 if (not result or len(result) < target
@@ -194,17 +212,29 @@ class PGIndex:
 
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
-               ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+               ef_search: int = 64, precision: str = "fp32",
+               rescore_k: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
         return self.search_batch(queries, k,
                                  valid_mask=self._valid_mask(candidate_ids),
-                                 ef_search=ef_search)
+                                 ef_search=ef_search, precision=precision,
+                                 rescore_k=rescore_k)
 
     def search_batch(self, queries: np.ndarray, k: int,
                      valid_mask: Optional[np.ndarray] = None,
-                     ef_search: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+                     ef_search: int = 64, precision: str = "fp32",
+                     rescore_k: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Batched front door: one shared result-collection mask for the
         whole query batch (hoisted out of the per-query loop — dsq_batch
-        passes each scope group's cached bool mask straight in)."""
+        passes each scope group's cached bool mask straight in).
+
+        ``precision="int8"`` navigates the graph against the int8 codes
+        (the traversal's row reads shrink 4x — the PG twin of the quantized
+        scan) collecting ``max(ef_search, rescore_k)`` scope-valid
+        candidates, then ranks the final top-k with the shared exact fp32
+        gather-rescore."""
+        from .quant import quantize_rows, resolve_rescore_k
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         nq = queries.shape[0]
         n = len(self.store)
@@ -212,6 +242,21 @@ class PGIndex:
         out_ids = np.full((nq, k), -1, dtype=np.int64)
         if n == 0:
             return out_scores, out_ids
+        if precision == "int8":
+            from .flat import gather_rescore
+            r = max(ef_search, resolve_rescore_k(k, rescore_k, n))
+            q_i8, q_s = quantize_rows(queries)
+            q_i8f = q_i8.astype(np.float32)
+            cand = np.full((nq, r), -1, dtype=np.int64)
+            for qi in range(nq):
+                dist_fn = functools.partial(self._distances_i8, q_i8f[qi],
+                                            float(q_s[qi]))
+                ids, _ = self._beam(queries[qi], self._entry, r,
+                                    valid_mask=valid_mask, k=k,
+                                    dist_fn=dist_fn)
+                ids = ids[:r]
+                cand[qi, : len(ids)] = ids
+            return gather_rescore(self.store, queries, cand, k)
         for qi in range(nq):
             ids, _ = self._beam(queries[qi], self._entry, ef_search,
                                 valid_mask=valid_mask, k=k)

@@ -132,6 +132,40 @@ def _ivf_batch_jnp(queries, centers, offsets, aligned, flat_ids, data, sq,
     return vals, ids
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "nprobe", "max_aligned", "metric"))
+def _ivf_batch_i8(queries, q_i8, q_scale, centers, offsets, aligned,
+                  flat_ids, q_rows, row_scale, q_sq, words, sids, k: int,
+                  nprobe: int, max_aligned: int, metric: str
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 phase of the two-phase batched IVF launch: probe (always fp32 —
+    the probed partition set must stay identical to the fp32 path's so the
+    two precisions explore the same candidates), gather the *int8 codes*
+    of the probed tiles, score int8 with merge-time scales, scope-mask,
+    top-``k`` (= rescore_k) candidate ids for the caller's exact fp32
+    gather-rescore."""
+    n = q_rows.shape[0]
+    cand = _probe_and_expand(queries, centers, offsets, aligned, flat_ids,
+                             nprobe, max_aligned)         # (B, C), n=invalid
+    valid = cand < n
+    safe = jnp.where(valid, cand, 0)
+    from .quant import int_exact_dot
+    rows8 = jnp.take(q_rows, safe, axis=0)                # (B, C, d) int8
+    s = int_exact_dot(rows8, q_i8, (((2,), (1,)), ((0,), (0,))))  # (B, C)
+    scores = s * (jnp.take(row_scale, safe) * q_scale[:, None])
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.take(q_sq, safe)
+    qwords = jnp.take(words, sids, axis=0)                # (B, n_words)
+    qbits = jnp.take_along_axis(qwords, safe >> 5, axis=1)
+    bit = (qbits >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = valid & (bit != 0)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    vals, loc = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(cand, loc, axis=1)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return vals, ids
+
+
 @functools.partial(jax.jit, static_argnames=("nprobe", "max_aligned"))
 def _ivf_expand_gather(queries, centers, offsets, aligned, flat_ids, data,
                        words, sids, nprobe: int, max_aligned: int):
@@ -235,7 +269,9 @@ class IVFIndex:
     # ----------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
-               nprobe: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+               nprobe: int = 8, precision: str = "fp32",
+               rescore_k: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
         """Probe nprobe partitions per query; returns (scores, ids) (q, k).
         Device-batched single-scope front door over :meth:`search_multi`."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
@@ -244,16 +280,25 @@ class IVFIndex:
         words = pack_ids_to_words(candidate_ids, n)
         sids = np.zeros(queries.shape[0], dtype=np.int32)
         return self.search_multi(queries, words[None, :], sids, k,
-                                 nprobe=nprobe)
+                                 nprobe=nprobe, precision=precision,
+                                 rescore_k=rescore_k)
 
     def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
                      scope_ids: np.ndarray, k: int, nprobe: int = 8,
-                     use_pallas: bool = False
+                     use_pallas: bool = False, precision: str = "fp32",
+                     rescore_k: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """One launch for a heterogeneous scope batch: queries (B, d), packed
         scope masks (n_scopes, ceil(n/32)) uint32, per-query scope row ids
         (B,). Tombstoned rows are ANDed out of every scope before the launch.
-        Returns (scores, ids) both (B, k); ids int64 with -1 padding."""
+        Returns (scores, ids) both (B, k); ids int64 with -1 padding.
+
+        ``precision="int8"`` gathers the probed tiles' *int8 codes* instead
+        of fp32 rows (a quarter of the gather bytes), keeps the scope-masked
+        top-``rescore_k`` per query, and finishes with the shared exact fp32
+        gather-rescore — the probe stage stays fp32 either way, so both
+        precisions explore identical partition sets."""
+        from .quant import quantize_rows, resolve_rescore_k
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         B = queries.shape[0]
         out_scores = np.full((B, k), -np.inf, dtype=np.float32)
@@ -270,9 +315,26 @@ class IVFIndex:
         alive = self.store.alive_words()
         if alive is not None:
             mask_words = mask_words & alive[None, :]
-        kk = min(k, C)
         if self._centers_dev is None:
             self._centers_dev = jnp.asarray(self.centers)
+        words_d = jnp.asarray(mask_words)
+        sids_d = jnp.asarray(scope_ids, dtype=jnp.int32)
+        if precision == "int8":
+            from .flat import gather_rescore
+            r = min(resolve_rescore_k(k, rescore_k, n), C)
+            q_i8, q_s = quantize_rows(queries)
+            q_sq = (self.store.device_q_sq_norms()
+                    if self.store.metric == "l2"
+                    else jnp.zeros(0, dtype=jnp.float32))
+            _, cand = _ivf_batch_i8(
+                jnp.asarray(queries), jnp.asarray(q_i8), jnp.asarray(q_s),
+                self._centers_dev, lay.offsets, lay.aligned, lay.flat_ids,
+                self.store.device_q_vectors(), self.store.device_q_scales(),
+                q_sq, words_d, sids_d, k=r, nprobe=nprobe,
+                max_aligned=lay.max_aligned, metric=self.store.metric)
+            return gather_rescore(self.store, queries,
+                                  np.asarray(cand, dtype=np.int64), k)
+        kk = min(k, C)
         args = (jnp.asarray(queries), self._centers_dev,
                 lay.offsets, lay.aligned, lay.flat_ids,
                 self.store.device_vectors())
@@ -280,8 +342,6 @@ class IVFIndex:
         # host→device transfer entirely for ip/cos
         sq = (self.store.device_sq_norms() if self.store.metric == "l2"
               else jnp.zeros(0, dtype=jnp.float32))
-        words_d = jnp.asarray(mask_words)
-        sids_d = jnp.asarray(scope_ids, dtype=jnp.int32)
         if use_pallas:
             from ..kernels import ops as kops
             cand, rows, qwords = _ivf_expand_gather(

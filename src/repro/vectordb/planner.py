@@ -32,6 +32,7 @@ from ..core import ResolveStats, RoaringBitmap, ScopeIndex
 from ..core import paths as P
 from ..core.interface import DSMDelta, ScopeSpec
 from .flat import GATHER_THRESHOLD, choose_plan
+from .quant import resolve_rescore_k
 
 
 @dataclass(frozen=True)
@@ -252,6 +253,11 @@ class PlanGroup:
     plan: str                        # "gather" | "scan" | "empty"
     entry: CachedScope
     cache_hit: bool = False
+    # chosen per group from the request-level precision knob: "int8" only
+    # where the quantized phase actually prunes (every scan group; a gather
+    # group only when its scope outsizes the rescore window — otherwise the
+    # exact fp32 gather already reads fewer bytes than int8 scan + rescore)
+    precision: str = "fp32"
 
     @property
     def candidate_ids(self) -> np.ndarray:   # gather plan reads this
@@ -285,6 +291,13 @@ class BatchAccounting:
     shard_mask_bytes: int = 0        # packed scope words uploaded (misses)
     shard_mask_hits: int = 0         # scan groups served from resident slots
     collective_bytes: int = 0        # all-gather (score, id) merge traffic
+    # quantized-tier terms (zero on pure-fp32 batches): the resident bytes
+    # of each precision's device store and how many candidates the int8
+    # phase handed to the exact fp32 rescore
+    precision_groups: Dict[str, int] = field(default_factory=dict)
+    db_bytes_fp32: int = 0           # fp32 device store bytes
+    db_bytes_int8: int = 0           # int8 codes + per-row scale bytes
+    rescore_candidates: int = 0      # total int8-phase survivors rescored
 
 
 def device_popcount(words: np.ndarray) -> int:
@@ -313,10 +326,16 @@ class BatchPlanner:
         return choose_plan(scope_size, n, k, self.gather_threshold)
 
     def plan(self, index: ScopeIndex, n: int, specs: Sequence[ScopeSpec],
-             k: int, acct: BatchAccounting) -> List[PlanGroup]:
+             k: int, acct: BatchAccounting, precision: str = "fp32",
+             rescore_k: Optional[int] = None) -> List[PlanGroup]:
         """Group a canonicalized batch by unique scope, resolve (cache-first,
         then one ``resolve_batch`` for the misses), and choose a plan per
-        group by selectivity."""
+        group by selectivity. With ``precision="int8"`` the planner also
+        picks the *precision* per group: scan groups ride the quantized
+        store (4x less scan bandwidth, then rescore), gather groups switch
+        to int8 only when the scope outsizes the rescore window — a gather
+        the window covers entirely is strictly better served by the exact
+        fp32 gather it would end with anyway."""
         order: Dict[ScopeKey, List[int]] = {}
         for i, spec in enumerate(specs):
             order.setdefault(ScopeKey.from_spec(spec), []).append(i)
@@ -349,8 +368,16 @@ class BatchPlanner:
             ent = resolved[key]
             size = ent.scope_size
             plan = self.choose_plan(size, n, k)
+            prec = "fp32"
+            if precision == "int8" and plan != "empty":
+                r = resolve_rescore_k(k, rescore_k, size)
+                if plan == "scan" or size > r:
+                    prec = "int8"
             groups.append(PlanGroup(
                 key=key, request_idx=idxs, scope_size=size, plan=plan,
-                entry=ent, cache_hit=key not in misses))
+                entry=ent, cache_hit=key not in misses, precision=prec))
             acct.plan_groups[plan] = acct.plan_groups.get(plan, 0) + 1
+            if plan != "empty":
+                acct.precision_groups[prec] = (
+                    acct.precision_groups.get(prec, 0) + 1)
         return groups

@@ -1,0 +1,86 @@
+"""Symmetric int8 scalar quantization — the device tier's compact row format.
+
+The quantized tier trades exactness for bytes exactly the way production
+VDBMSs ship it (SQ-8 in the Pan et al. / Ma et al. survey taxonomies): each
+row is stored as int8 codes plus ONE fp32 scale, so the device store shrinks
+~4x (``dim + 4`` bytes per row vs ``4 * dim``) and the scan reads a quarter
+of the HBM bytes. Scoring is *asymmetric-free*: queries are quantized with
+their own per-row scale, the MXU/ALU accumulates the int8 dot in int32, and
+the two scales multiply back in at merge time:
+
+    score(q, x)  ≈  dot_i32(q_i8, x_i8) * q_scale * x_scale
+
+which is EXACT for the quantized operands (int32 accumulation never rounds
+for d * 127^2 << 2^31), so the only error is the per-component rounding of
+the codes themselves. The two-phase execution plan (int8 scan selects
+``rescore_k >= k`` candidates, exact fp32 gather-rescore ranks the final
+top-k) then erases that error for every candidate the scan surfaces — the
+recall contract of ``benchmarks/bench_quantized.py``.
+
+Convention: all-zero rows quantize to scale 1.0 / all-zero codes so
+dequantization is total (no divide-by-zero, no NaN scores).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+# int8 scan phase keeps this many candidates per query (times k) before the
+# exact fp32 rescore, unless the caller passes an explicit ``rescore_k``
+DEFAULT_RESCORE_FACTOR = 4
+
+Q_MAX = 127
+
+
+def quantize_rows(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 quantization.
+
+    Returns ``(codes (n, d) int8, scales (n,) float32)`` with
+    ``scale = max|row| / 127`` (1.0 for all-zero rows) and
+    ``codes = round(row / scale)`` clipped to ``[-127, 127]``.
+    """
+    rows = np.atleast_2d(np.asarray(rows, dtype=np.float32))
+    amax = np.max(np.abs(rows), axis=1)
+    scales = np.where(amax > 0.0, amax / Q_MAX, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(rows / scales[:, None]), -Q_MAX, Q_MAX)
+    return codes.astype(np.int8), scales
+
+
+def dequantize_rows(codes: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_rows`: ``codes * scale`` per row, fp32."""
+    return codes.astype(np.float32) * np.asarray(
+        scales, dtype=np.float32)[:, None]
+
+
+def resolve_rescore_k(k: int, rescore_k: Optional[int], n: int) -> int:
+    """Effective int8-phase candidate count: the caller's ``rescore_k``
+    (defaulting to ``DEFAULT_RESCORE_FACTOR * k``), at least ``k``, at most
+    the ``n`` rows that exist."""
+    r = DEFAULT_RESCORE_FACTOR * k if rescore_k is None else int(rescore_k)
+    return max(1, min(max(r, k), n)) if n > 0 else max(k, 1)
+
+
+def int_exact_dot(a_i8, b_i8, dnums=(((1,), (1,)), ((), ())),
+                  contract_dim: Optional[int] = None):
+    """Dot of int8 code tensors as fp32 — THE shared scoring primitive of
+    every int8 jnp twin (flat scan/gather, IVF tile scoring, the sharded
+    local scan): one definition so the cross-executor "identical int8
+    scores" contract can never drift.
+
+    While every partial sum stays under 2^24 (``d * 127^2``; holds for any
+    realistic dim) the f32 accumulation is bitwise the int32 result the
+    Pallas kernels compute, but it rides the fast f32 GEMM on backends
+    whose int8 path is a scalar loop (CPU XLA). Past the bound it falls
+    back to true int32 accumulation. ``contract_dim`` defaults to the last
+    axis of ``a_i8`` (pass it explicitly for exotic dnums)."""
+    import jax
+    import jax.numpy as jnp
+    d = a_i8.shape[-1] if contract_dim is None else contract_dim
+    if d * Q_MAX * Q_MAX < (1 << 24):
+        return jax.lax.dot_general(
+            a_i8.astype(jnp.float32), b_i8.astype(jnp.float32), dnums,
+            preferred_element_type=jnp.float32)
+    return jax.lax.dot_general(
+        a_i8, b_i8, dnums,
+        preferred_element_type=jnp.int32).astype(jnp.float32)

@@ -39,7 +39,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .flat import FlatExecutor, choose_plan, pad_topk
+from .flat import FlatExecutor, choose_plan, gather_rescore, pad_topk
+from .quant import quantize_rows, resolve_rescore_k
 from .store import ShardedStoreView, VectorStore, pack_ids_to_words
 
 
@@ -83,6 +84,7 @@ class ShardedExecutor:
         self._host_table: Optional[np.ndarray] = None   # (S, W) mirror
         self._table = None                               # device (S, W)
         self._fns: Dict[Tuple[int, int], object] = {}    # (cap, k) -> jit fn
+        self._fns_i8: Dict[Tuple[int, int], object] = {}  # (cap, r) -> jit fn
         self._lock = threading.Lock()        # serving vs DSM delta threads
         # lifetime accounting (the per-batch deltas land in BatchAccounting)
         self.mask_bytes_uploaded = 0
@@ -110,6 +112,8 @@ class ShardedExecutor:
                 cap = self.view.cap
                 self._fns = {key: fn for key, fn in self._fns.items()
                              if key[0] == cap}
+                self._fns_i8 = {key: fn for key, fn in self._fns_i8.items()
+                                if key[0] == cap}
 
     def reserve(self, n_scopes: int) -> None:
         """Grow the scope table so one batch's scan groups all fit. Without
@@ -140,6 +144,17 @@ class ShardedExecutor:
                                            self.store.dim, k,
                                            self.store.metric)
             self._fns[key] = fn
+        return fn
+
+    def _fn_i8(self, r: int):
+        key = (self.view.cap, r)
+        fn = self._fns_i8.get(key)
+        if fn is None:
+            from ..distributed.search import make_sharded_batch_search_i8
+            fn = make_sharded_batch_search_i8(self.mesh, self.view.cap,
+                                              self.store.dim, r,
+                                              self.store.metric)
+            self._fns_i8[key] = fn
         return fn
 
     # ----------------------------------------------------------- scope table
@@ -242,18 +257,38 @@ class ShardedExecutor:
                 self.masks_evicted += 1
 
     # --------------------------------------------------------------- queries
-    def scan_on_mesh(self, k: int) -> bool:
-        """The per-shard local top-k needs ``k`` local rows; tiny stores (or
-        huge k) fall back to the single-device flat twin, bit-identically."""
-        return 0 < k <= self.view.n_loc
+    def phase_depth(self, k: int, precision: str = "fp32",
+                    rescore_k: Optional[int] = None) -> int:
+        """Per-shard top-k depth the scan launch must support: ``k`` for the
+        exact fp32 scan, the effective ``rescore_k`` for the int8 phase."""
+        if precision == "int8":
+            return resolve_rescore_k(k, rescore_k, len(self.store))
+        return k
+
+    def scan_on_mesh(self, k: int, precision: str = "fp32",
+                     rescore_k: Optional[int] = None) -> bool:
+        """The per-shard local top-k needs that many local rows; tiny stores
+        (or huge k / rescore_k) fall back to the single-device flat twin,
+        bit-identically (fp32) / same-two-phase (int8)."""
+        depth = self.phase_depth(k, precision, rescore_k)
+        return 0 < depth <= self.view.n_loc
 
     def search_slots(self, queries: np.ndarray, slot_ids: np.ndarray,
-                     k: int) -> Tuple[np.ndarray, np.ndarray]:
+                     k: int, precision: str = "fp32",
+                     rescore_k: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
         """ONE shard_map launch ranking every scan-plan request of the batch
         against the device-resident scope table. Same result contract as
         ``FlatExecutor.search_multi``: (B, k) scores/ids, ids == -1 where the
-        scope ran out of candidates."""
+        scope ran out of candidates. ``precision="int8"``: the mesh scans
+        the sharded int8 mirror, each shard keeps rescore_k local
+        candidates, the shard-merge replicates the global rescore_k set, and
+        ONE exact fp32 gather-rescore on the host store ranks the final k."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        if precision == "int8":
+            r = self.phase_depth(k, precision, rescore_k)
+            cand = self._launch_i8(queries, self._table, slot_ids, r)
+            return gather_rescore(self.store, queries, cand, k)
         scores, ids = self._launch(queries, self._table, slot_ids, k)
         ids[~np.isfinite(scores)] = -1
         return scores, ids
@@ -266,9 +301,24 @@ class ShardedExecutor:
         self.launches += 1
         return np.asarray(s), np.asarray(i, dtype=np.int64)
 
+    def _launch_i8(self, queries, table, sids, r) -> np.ndarray:
+        """int8 scan phase on the mesh: returns the merged (B, r) global
+        candidate ids (-1 where a scope ran dry)."""
+        qdb, qscale = self.view.q_device()
+        q_i8, q_s = quantize_rows(queries)
+        fn = self._fn_i8(r)
+        s, i = fn(qdb, qscale, table, self.view.alive_device(),
+                  jnp.asarray(np.asarray(sids, dtype=np.int32)),
+                  jnp.asarray(q_i8), jnp.asarray(q_s))
+        self.launches += 1
+        cand = np.asarray(i, dtype=np.int64)
+        cand[~np.isfinite(np.asarray(s))] = -1
+        return cand
+
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
-               plan: Optional[str] = None
+               plan: Optional[str] = None, precision: str = "fp32",
+               rescore_k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Single-scope front door, mirroring ``FlatExecutor.search``'s plan
         decision; the scan plan runs on the mesh (an ad-hoc one-row scope
@@ -278,7 +328,9 @@ class ShardedExecutor:
         A stale caller-supplied id set containing tombstones diverges on the
         scan plan only: the mesh ANDs the store tombstone mask in-register,
         so deleted rows cannot resurface there (the flat twin would score
-        them)."""
+        them). ``precision="int8"`` follows the same plan decision with the
+        two-phase pipeline: gather delegates to the flat twin's int8 gather,
+        scan runs the sharded int8 mirror + one global fp32 rescore."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         n = len(self.store)
         if candidate_ids is None:
@@ -293,14 +345,21 @@ class ShardedExecutor:
         kk = min(k, m)
         if plan == "gather":
             return self.flat.search(queries, k, candidate_ids=candidate_ids,
-                                    plan=plan)
+                                    plan=plan, precision=precision,
+                                    rescore_k=rescore_k)
         self.sync()
-        if not self.scan_on_mesh(kk):
+        if not self.scan_on_mesh(kk, precision, rescore_k):
             return self.flat.search(queries, k, candidate_ids=candidate_ids,
-                                    plan=plan)
+                                    plan=plan, precision=precision,
+                                    rescore_k=rescore_k)
         words = np.zeros(self.view.n_words, dtype=np.uint32)
         w = pack_ids_to_words(candidate_ids, n)
         words[: len(w)] = w
+        if precision == "int8":
+            r = self.phase_depth(kk, precision, rescore_k)
+            cand = self._launch_i8(queries, jnp.asarray(words[None, :]),
+                                   np.zeros(queries.shape[0], np.int32), r)
+            return gather_rescore(self.store, queries, cand, k)
         scores, ids = self._launch(queries, jnp.asarray(words[None, :]),
                                    np.zeros(queries.shape[0], np.int32), kk)
         # a lane can only exhaust when the candidate set held tombstoned ids
@@ -314,6 +373,7 @@ class ShardedExecutor:
         return {"n_shards": self.n_shards, "cap": self.view.cap,
                 "reshards": self.view.reshards,
                 "db_bytes_uploaded": self.view.db_bytes_uploaded,
+                "q_bytes_uploaded": self.view.q_bytes_uploaded,
                 "slots": len(self._slots),
                 "mask_bytes_uploaded": self.mask_bytes_uploaded,
                 "mask_bytes_patched": self.mask_bytes_patched,

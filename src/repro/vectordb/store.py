@@ -19,6 +19,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .quant import quantize_rows
+
 METRICS = ("ip", "l2", "cos")
 
 
@@ -84,6 +86,22 @@ class VectorStore:
         self._device_cache: Optional[jnp.ndarray] = None
         self._norms_cache: Optional[np.ndarray] = None
         self._device_norms: Optional[jnp.ndarray] = None
+        # int8 scalar-quantized tier: per-row codes + scale, maintained
+        # incrementally alongside the fp32 rows through a lazy watermark —
+        # rows [0, _q_n) are quantized, and any quantized-tier accessor
+        # catches the mirror up to _n first (so a pure-fp32 workload never
+        # pays the quantization, and once the tier is in use each ingest
+        # batch is quantized exactly once). Tombstones need no mirror:
+        # deleted rows are masked out by the same packed alive/scope words
+        # both precisions AND in. Device mirrors are lazily cached like the
+        # fp32 ones.
+        self._q_rows: Optional[np.ndarray] = None
+        self._q_scale: Optional[np.ndarray] = None
+        self._q_n = 0
+        self._device_q: Optional[jnp.ndarray] = None
+        self._device_q_scale: Optional[jnp.ndarray] = None
+        self._q_norms_cache: Optional[np.ndarray] = None
+        self._device_q_norms: Optional[jnp.ndarray] = None
         # Tombstones: rows are append-only, so a delete marks the id dead
         # here and every executor consults the alive mask at query time
         # (scoped searches drop deleted ids via the directory layer already;
@@ -193,8 +211,74 @@ class VectorStore:
             self._device_norms = jnp.asarray(self.sq_norms())
         return self._device_norms
 
+    # ----------------------------------------------------- int8 scalar tier
+    def _ensure_quantized(self) -> None:
+        """Catch the int8 mirror up to the current row count: quantizes only
+        the fresh ``[_q_n, _n)`` slice (post-normalization rows, so the
+        codes always mirror exactly what the fp32 scan would score)."""
+        if self._q_n == self._n and self._q_rows is not None:
+            return
+        cap = self._rows.shape[0]
+        if self._q_rows is None or self._q_rows.shape[0] < cap:
+            grown_q = np.zeros((cap, self.dim), dtype=np.int8)
+            grown_s = np.ones(cap, dtype=np.float32)
+            if self._q_rows is not None:
+                grown_q[: self._q_n] = self._q_rows[: self._q_n]
+                grown_s[: self._q_n] = self._q_scale[: self._q_n]
+            self._q_rows, self._q_scale = grown_q, grown_s
+        if self._q_n < self._n:
+            codes, scales = quantize_rows(self._rows[self._q_n: self._n])
+            self._q_rows[self._q_n: self._n] = codes
+            self._q_scale[self._q_n: self._n] = scales
+        self._q_n = self._n
+
+    @property
+    def q_vectors(self) -> np.ndarray:
+        """(n, d) int8 codes (see :mod:`.quant` for the scoring contract)."""
+        self._ensure_quantized()
+        return self._q_rows[: self._n]
+
+    @property
+    def q_scales(self) -> np.ndarray:
+        """(n,) fp32 per-row dequantization scales."""
+        self._ensure_quantized()
+        return self._q_scale[: self._n]
+
+    def device_q_vectors(self) -> jnp.ndarray:
+        if self._device_q is None or self._device_q.shape[0] != self._n:
+            self._device_q = jnp.asarray(self.q_vectors)
+        return self._device_q
+
+    def device_q_scales(self) -> jnp.ndarray:
+        if (self._device_q_scale is None
+                or self._device_q_scale.shape[0] != self._n):
+            self._device_q_scale = jnp.asarray(self.q_scales)
+        return self._device_q_scale
+
+    def q_sq_norms(self) -> np.ndarray:
+        """(n,) fp32 squared norms of the *dequantized* rows — the ``||x||^2``
+        term the int8 l2 scan subtracts, so int8 scores are exact for the
+        quantized operands (scale^2 * sum(codes^2), int32-accumulated)."""
+        if (self._q_norms_cache is None
+                or self._q_norms_cache.shape[0] != self._n):
+            codes = self.q_vectors.astype(np.int32)
+            self._q_norms_cache = (
+                np.einsum("nd,nd->n", codes, codes).astype(np.float32)
+                * self.q_scales * self.q_scales)
+        return self._q_norms_cache
+
+    def device_q_sq_norms(self) -> jnp.ndarray:
+        if (self._device_q_norms is None
+                or self._device_q_norms.shape[0] != self._n):
+            self._device_q_norms = jnp.asarray(self.q_sq_norms())
+        return self._device_q_norms
+
     def nbytes(self) -> int:
         return self._n * self.dim * 4
+
+    def q_nbytes(self) -> int:
+        """Device bytes of the int8 tier: codes + one fp32 scale per row."""
+        return self._n * self.dim + self._n * 4
 
 
 class ShardedStoreView:
@@ -225,8 +309,15 @@ class ShardedStoreView:
         self._alive_host = None          # host mirror of the same words
         self._alive_n = 0                # rows covered by the mirror
         self._alive_cursor = 0           # consumed prefix of the tombstone log
+        # int8 tier mirror (codes + per-row scales), built lazily on the
+        # first quantized scan and then maintained through the same
+        # incremental-scatter / capacity-re-shard policy as the fp32 rows
+        self._qdb = None                 # (cap, dim) int8, row-sharded
+        self._qscale = None              # (cap,) f32, row-sharded
+        self._q_synced = 0
         self.db_bytes_uploaded = 0       # incremental row-scatter traffic
         self.alive_bytes_uploaded = 0    # alive-mask scatter traffic
+        self.q_bytes_uploaded = 0        # int8 mirror scatter traffic
         self.reshards = 0                # full capacity re-shards
 
     @property
@@ -267,6 +358,7 @@ class ShardedStoreView:
             self.db_bytes_uploaded += host.nbytes
             self.reshards += 1
             self._alive = None
+            self._qdb = None        # int8 mirror rebuilds at the new capacity
             return True
         if n > self._synced:
             n_new = n - self._synced
@@ -278,6 +370,41 @@ class ShardedStoreView:
             self.db_bytes_uploaded += n_new * self.store.dim * 4
             self._synced = n
         return False
+
+    def q_device(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Row-sharded int8 mirror ``(codes (cap, d) int8, scales (cap,)
+        f32)``. Built lazily on the first quantized scan (a gather-only or
+        fp32-only workload never pays the upload) and maintained
+        incrementally afterwards: fresh store rows land via the same
+        power-of-two-padded device scatter as the fp32 mirror. Capacity
+        padding rows are zero codes with zero scale — they score 0 and are
+        masked by :meth:`alive_device` anyway. Call :meth:`sync` first."""
+        assert self._db is not None, "call sync() before q_device()"
+        n = len(self.store)
+        if self._qdb is None:
+            host_q = np.zeros((self._cap, self.store.dim), dtype=np.int8)
+            host_q[:n] = self.store.q_vectors
+            host_s = np.zeros(self._cap, dtype=np.float32)
+            host_s[:n] = self.store.q_scales
+            self._qdb = jax.device_put(host_q,
+                                       self._sharding(self.axes, None))
+            self._qscale = jax.device_put(host_s, self._sharding(self.axes))
+            self.q_bytes_uploaded += host_q.nbytes + host_s.nbytes
+            self._q_synced = n
+        elif n > self._q_synced:
+            n_new = n - self._q_synced
+            pad = _pow2_at_most(n_new, self._cap - self._q_synced)
+            chunk = np.zeros((pad, self.store.dim), dtype=np.int8)
+            chunk[:n_new] = self.store.q_vectors[self._q_synced: n]
+            self._qdb = _scatter_rows(self._qdb, jnp.asarray(chunk),
+                                      jnp.int32(self._q_synced))
+            sch = np.zeros(pad, dtype=np.float32)
+            sch[:n_new] = self.store.q_scales[self._q_synced: n]
+            self._qscale = _scatter_words(self._qscale, jnp.asarray(sch),
+                                          jnp.int32(self._q_synced))
+            self.q_bytes_uploaded += n_new * (self.store.dim + 4)
+            self._q_synced = n
+        return self._qdb, self._qscale
 
     def _patch_alive_range(self, w_lo: int, w_hi: int) -> None:
         """Recompute words [w_lo, w_hi) from authoritative store state and

@@ -95,6 +95,137 @@ def test_multi_scope_topk_empty_scope_row():
     assert (np.asarray(i)[1] >= 0).all()
 
 
+def _quantize(rows):
+    from repro.vectordb.quant import quantize_rows
+    return quantize_rows(rows)
+
+
+def _q_norms(codes, scales):
+    c = codes.astype(np.int32)
+    return np.einsum("nd,nd->n", c, c).astype(np.float32) * scales * scales
+
+
+@pytest.mark.parametrize("q,n,d,k,metric,block_q,block_n", [
+    (1, 128, 32, 4, "ip", 8, 1024),
+    (3, 1000, 64, 10, "ip", 8, 1024),
+    (8, 4096, 128, 10, "l2", 8, 1024),
+    (5, 2048, 256, 16, "l2", 4, 512),
+    (16, 512, 512, 32, "ip", 8, 128),
+    (2, 777, 128, 1, "ip", 2, 256),
+])
+def test_scoped_topk_i8_sweep(q, n, d, k, metric, block_q, block_n):
+    """int8 scan kernel vs the numpy oracle across block shapes and k: the
+    int32-accumulated code dot with merge-time scales must match the oracle
+    bitwise on scores (both compute the identical fp32 products)."""
+    Q = RNG.normal(size=(q, d)).astype(np.float32)
+    X = RNG.normal(size=(n, d)).astype(np.float32)
+    q_i8, q_s = _quantize(Q)
+    x_i8, x_s = _quantize(X)
+    sq = _q_norms(x_i8, x_s)
+    mask = RNG.random(n) < 0.4
+    v1, i1 = ops.scoped_topk_i8(q_i8, q_s, x_i8, x_s, sq, mask, k=k,
+                                metric=metric, block_q=block_q,
+                                block_n=block_n)
+    v2, i2 = ref.scoped_topk_i8_ref(q_i8, q_s, x_i8, x_s, sq, mask, k=k,
+                                    metric=metric)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    for qi in range(q):
+        for slot in range(k):
+            idx = int(i1[qi, slot])
+            if idx >= 0:
+                assert mask[idx], (qi, slot, idx)
+            else:
+                assert v2[qi, slot] <= ref.NEG_INF
+
+
+@pytest.mark.parametrize("q,n,d,k,metric,n_scopes", [
+    (1, 128, 32, 4, "ip", 1),
+    (5, 1000, 64, 10, "ip", 3),
+    (8, 777, 128, 7, "l2", 4),
+    (16, 2048, 256, 16, "l2", 5),
+])
+def test_multi_scope_topk_i8_sweep(q, n, d, k, metric, n_scopes):
+    """Heterogeneous-batch int8 kernel vs the numpy oracle: packed-word
+    scope indirection over the quantized store."""
+    Q = RNG.normal(size=(q, d)).astype(np.float32)
+    X = RNG.normal(size=(n, d)).astype(np.float32)
+    q_i8, q_s = _quantize(Q)
+    x_i8, x_s = _quantize(X)
+    sq = _q_norms(x_i8, x_s)
+    dense = RNG.random((n_scopes, n)) < 0.4
+    pad = (-n) % 32
+    words = np.stack([
+        np.packbits(np.pad(m, (0, pad)), bitorder="little").view(np.uint32)
+        for m in dense])
+    sid = RNG.integers(0, n_scopes, size=q).astype(np.int32)
+    v1, i1 = ops.multi_scope_topk_i8(q_i8, q_s, x_i8, x_s, sq, words, sid,
+                                     k=k, metric=metric)
+    v2, i2 = ref.multi_scope_topk_i8_ref(q_i8, q_s, x_i8, x_s, sq, words,
+                                         sid, k=k, metric=metric)
+    np.testing.assert_allclose(np.asarray(v1), v2, rtol=1e-6, atol=1e-6)
+    for qi in range(q):
+        for slot in range(k):
+            idx = int(i1[qi, slot])
+            if idx >= 0:
+                assert dense[sid[qi], idx], (qi, slot, idx)
+
+
+def test_multi_scope_topk_i8_empty_scope_row():
+    """A scope with zero candidates yields all -1 for its queries while
+    other scopes in the same int8 launch are unaffected."""
+    Q = RNG.normal(size=(2, 32)).astype(np.float32)
+    X = RNG.normal(size=(256, 32)).astype(np.float32)
+    q_i8, q_s = _quantize(Q)
+    x_i8, x_s = _quantize(X)
+    sq = _q_norms(x_i8, x_s)
+    words = np.stack([
+        np.zeros(8, np.uint32),
+        np.packbits(np.ones(256, bool), bitorder="little").view(np.uint32)])
+    sid = np.array([0, 1], np.int32)
+    v, i = ops.multi_scope_topk_i8(q_i8, q_s, x_i8, x_s, sq, words, sid, k=4)
+    assert (np.asarray(i)[0] == -1).all()
+    assert (np.asarray(i)[1] >= 0).all()
+
+
+def test_scoped_topk_i8_all_masked_tiles():
+    """Whole blocks masked out (and the fully-empty mask) never surface a
+    candidate — the merge must ignore all-masked tiles entirely."""
+    Q = RNG.normal(size=(2, 64)).astype(np.float32)
+    X = RNG.normal(size=(1024, 64)).astype(np.float32)
+    q_i8, q_s = _quantize(Q)
+    x_i8, x_s = _quantize(X)
+    sq = _q_norms(x_i8, x_s)
+    v, i = ops.scoped_topk_i8(q_i8, q_s, x_i8, x_s, sq,
+                              np.zeros(1024, bool), k=4, block_n=256)
+    assert (np.asarray(i) == -1).all()
+    # only the last block carries candidates: ids must all land there
+    mask = np.zeros(1024, bool)
+    mask[768:] = True
+    v, i = ops.scoped_topk_i8(q_i8, q_s, x_i8, x_s, sq, mask, k=8,
+                              block_n=256)
+    i = np.asarray(i)
+    assert (i >= 768).all()
+    v2, i2 = ref.scoped_topk_i8_ref(q_i8, q_s, x_i8, x_s, sq, mask, k=8)
+    np.testing.assert_allclose(np.asarray(v), v2, rtol=1e-6, atol=1e-6)
+
+
+def test_scoped_topk_i8_matches_fp32_ranking():
+    """The int8 scan's top-k set approximates the fp32 kernel's: with a
+    4x-rescore-sized k every fp32 top-k member must appear (the recall
+    contract the two-phase plan relies on)."""
+    Q = RNG.normal(size=(4, 64)).astype(np.float32)
+    X = RNG.normal(size=(2048, 64)).astype(np.float32)
+    q_i8, q_s = _quantize(Q)
+    x_i8, x_s = _quantize(X)
+    sq = _q_norms(x_i8, x_s)
+    mask = np.ones(2048, bool)
+    vf, idf = ops.scoped_topk(Q, X, mask, k=10)
+    v8, id8 = ops.scoped_topk_i8(q_i8, q_s, x_i8, x_s, sq, mask, k=40)
+    idf, id8 = np.asarray(idf), np.asarray(id8)
+    for qi in range(4):
+        assert set(idf[qi].tolist()) <= set(id8[qi].tolist())
+
+
 @pytest.mark.parametrize("b,c,d,k,metric,density", [
     (1, 128, 32, 4, "ip", 0.5),
     (4, 640, 64, 10, "ip", 0.3),

@@ -1,0 +1,234 @@
+"""int8 scalar-quantized tier: store maintenance, two-phase executor
+contracts, planner precision selection, and accounting.
+
+The correctness contract under test everywhere: phase 1 (int8 scan/gather)
+only *selects* candidates, phase 2 rescore is exact fp32 — so with
+``rescore_k`` covering the candidate universe the int8 path must reproduce
+the fp32 exact top-k set, and returned scores are always true fp32 scores.
+"""
+import numpy as np
+import pytest
+
+from repro.vectordb import DirectoryVectorDB
+from repro.vectordb.flat import FlatExecutor, gather_rescore
+from repro.vectordb.planner import BatchAccounting, BatchPlanner
+from repro.vectordb.quant import (DEFAULT_RESCORE_FACTOR, dequantize_rows,
+                                  quantize_rows, resolve_rescore_k)
+from repro.vectordb.sharded import ShardedExecutor
+from repro.vectordb.store import VectorStore
+
+RNG = np.random.default_rng(0)
+DIM = 32
+
+
+# ------------------------------------------------------------------- quant
+def test_quantize_roundtrip_error_bound():
+    rows = RNG.normal(size=(64, DIM)).astype(np.float32)
+    codes, scales = quantize_rows(rows)
+    assert codes.dtype == np.int8 and scales.dtype == np.float32
+    back = dequantize_rows(codes, scales)
+    # symmetric per-row scale: error is at most half a quantization step
+    step = np.abs(rows).max(axis=1) / 127.0
+    assert np.all(np.abs(back - rows) <= step[:, None] * 0.5 + 1e-7)
+
+
+def test_quantize_zero_row_total():
+    codes, scales = quantize_rows(np.zeros((2, DIM), np.float32))
+    assert (codes == 0).all() and (scales == 1.0).all()
+    assert np.isfinite(dequantize_rows(codes, scales)).all()
+
+
+def test_resolve_rescore_k():
+    assert resolve_rescore_k(10, None, 10_000) == DEFAULT_RESCORE_FACTOR * 10
+    assert resolve_rescore_k(10, 25, 10_000) == 25
+    assert resolve_rescore_k(10, 3, 10_000) == 10      # never below k
+    assert resolve_rescore_k(10, None, 7) == 7         # never above n
+
+
+# ------------------------------------------------------------------- store
+def test_store_incremental_quantized_maintenance():
+    """The int8 codes/scales must always mirror quantize_rows(all rows),
+    through multiple incremental adds and capacity growth."""
+    st = VectorStore(DIM, "ip", capacity=4)
+    chunks = [RNG.normal(size=(n, DIM)).astype(np.float32)
+              for n in (3, 17, 50)]
+    for c in chunks:
+        st.add(c)
+    want_codes, want_scales = quantize_rows(np.concatenate(chunks))
+    np.testing.assert_array_equal(st.q_vectors, want_codes)
+    np.testing.assert_allclose(st.q_scales, want_scales)
+    assert st.q_nbytes() == len(st) * (DIM + 4)
+    assert st.q_nbytes() < 0.30 * st.nbytes()
+
+
+def test_store_cos_normalizes_before_quantizing():
+    st = VectorStore(DIM, "cos")
+    st.add(10.0 * RNG.normal(size=(8, DIM)).astype(np.float32))
+    back = dequantize_rows(st.q_vectors, st.q_scales)
+    np.testing.assert_allclose(back, st.vectors, atol=0.02)
+
+
+def test_sharded_view_q_mirror_incremental():
+    """The sharded int8 mirror follows ingest growth incrementally and
+    rebuilds on a capacity re-shard."""
+    st = VectorStore(DIM, "ip")
+    st.add(RNG.normal(size=(40, DIM)).astype(np.float32))
+    ex = ShardedExecutor(st)
+    ex.sync()
+    qdb, qs = ex.view.q_device()
+    assert qdb.dtype == np.int8 and qdb.shape[0] == ex.view.cap
+    np.testing.assert_array_equal(np.asarray(qdb)[:40], st.q_vectors)
+    up0 = ex.view.q_bytes_uploaded
+    # in-capacity growth: incremental scatter, no full re-upload
+    if ex.view.cap - len(st) > 2:
+        st.add(RNG.normal(size=(2, DIM)).astype(np.float32))
+        ex.sync()
+        qdb, qs = ex.view.q_device()
+        np.testing.assert_array_equal(np.asarray(qdb)[:42], st.q_vectors)
+        assert 0 < ex.view.q_bytes_uploaded - up0 < up0
+    # growth past capacity: the mirror rebuilds at the doubled capacity
+    st.add(RNG.normal(size=(ex.view.cap, DIM)).astype(np.float32))
+    ex.sync()
+    qdb, qs = ex.view.q_device()
+    assert qdb.shape[0] == ex.view.cap
+    np.testing.assert_array_equal(np.asarray(qdb)[: len(st)], st.q_vectors)
+    np.testing.assert_allclose(np.asarray(qs)[: len(st)], st.q_scales)
+
+
+# --------------------------------------------------------------- executors
+@pytest.mark.parametrize("metric", ["ip", "l2", "cos"])
+def test_flat_int8_exhaustive_rescore_equals_fp32(metric):
+    st = VectorStore(DIM, metric)
+    st.add(RNG.normal(size=(1500, DIM)).astype(np.float32))
+    ex = FlatExecutor(st)
+    q = RNG.normal(size=(4, DIM)).astype(np.float32)
+    sf, i_f = ex.search(q, 10)
+    s8, i8 = ex.search(q, 10, precision="int8", rescore_k=1500)
+    np.testing.assert_array_equal(i_f, i8)
+    np.testing.assert_allclose(sf, s8, rtol=1e-4, atol=1e-4)
+
+
+def test_flat_int8_gather_plans():
+    """Gather-plan int8: scopes inside the rescore window take the exact
+    fp32 gather; larger ones prune with int8 first but never leave scope."""
+    st = VectorStore(DIM, "ip")
+    st.add(RNG.normal(size=(4000, DIM)).astype(np.float32))
+    ex = FlatExecutor(st)
+    q = RNG.normal(size=(3, DIM)).astype(np.float32)
+    small = np.arange(30, dtype=np.uint32)          # 30 <= rescore_k=40
+    sf, i_f = ex.search(q, 10, candidate_ids=small)
+    s8, i8 = ex.search(q, 10, candidate_ids=small, precision="int8")
+    np.testing.assert_array_equal(i_f, i8)
+    np.testing.assert_array_equal(sf, s8)           # identical fp32 launch
+    big = np.arange(150, dtype=np.uint32)           # gather plan, > window
+    s8b, i8b = ex.search(q, 10, candidate_ids=big, precision="int8")
+    assert set(i8b.ravel().tolist()) <= set(range(150))
+    assert np.isfinite(s8b).all()
+
+
+def test_empty_scope_int8():
+    st = VectorStore(DIM, "ip")
+    st.add(RNG.normal(size=(100, DIM)).astype(np.float32))
+    ex = FlatExecutor(st)
+    q = RNG.normal(size=(2, DIM)).astype(np.float32)
+    s, i = ex.search(q, 5, candidate_ids=np.empty(0, np.uint32),
+                     precision="int8")
+    assert (i == -1).all() and not np.isfinite(s).any()
+
+
+def test_gather_rescore_padding_contract():
+    """-1 candidates never surface; short candidate lists right-pad."""
+    st = VectorStore(DIM, "ip")
+    st.add(RNG.normal(size=(50, DIM)).astype(np.float32))
+    q = RNG.normal(size=(2, DIM)).astype(np.float32)
+    cand = np.array([[3, 7, -1, -1], [-1, -1, -1, -1]], np.int64)
+    s, i = gather_rescore(st, q, cand, k=3)
+    assert i.shape == (2, 3)
+    assert set(i[0].tolist()) <= {3, 7, -1}
+    assert (i[1] == -1).all()
+    assert int((i[0] >= 0).sum()) == 2
+
+
+def test_tombstones_respected_by_int8_scan():
+    db = DirectoryVectorDB(dim=DIM)
+    ids = db.ingest(RNG.normal(size=(600, DIM)).astype(np.float32),
+                    ["/x/"] * 600)
+    db.build_ann("flat")
+    q = RNG.normal(size=DIM).astype(np.float32)
+    top = db.dsq(q, "/x/", k=5, precision="int8").ids[0]
+    for eid in top[:2]:
+        db.delete(int(eid))
+    after = db.dsq(q, "/x/", k=5, precision="int8").ids[0]
+    assert not (set(after.tolist()) & set(int(x) for x in top[:2]))
+
+
+# ----------------------------------------------------- planner + accounting
+def test_planner_precision_per_group():
+    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+    paths = ["/broad/"] * 900 + ["/narrow/"] * 20
+    db.ingest(RNG.normal(size=(920, DIM)).astype(np.float32), paths)
+    db.build_ann("flat")
+    planner = db.planner()
+    from repro.core.interface import normalize_batch
+    acct = BatchAccounting()
+    groups = planner.plan(db.namespaces["fs"], len(db.store),
+                          normalize_batch(["/broad/", "/narrow/"], True,
+                                          None),
+                          k=10, acct=acct, precision="int8")
+    by_path = {str(g.key.path): g for g in groups}
+    broad = by_path[[p for p in by_path if "broad" in p][0]]
+    narrow = by_path[[p for p in by_path if "narrow" in p][0]]
+    assert broad.plan == "scan" and broad.precision == "int8"
+    # 20 candidates < rescore window (40): int8 phase keeps them all, so
+    # the planner leaves the group on the exact fp32 gather
+    assert narrow.plan == "gather" and narrow.precision == "fp32"
+    assert acct.precision_groups == {"int8": 1, "fp32": 1}
+
+
+def test_batch_accounting_quantized_terms():
+    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+    db.ingest(RNG.normal(size=(1200, DIM)).astype(np.float32),
+              ["/a/"] * 600 + ["/b/"] * 600)
+    db.build_ann("flat")
+    q = RNG.normal(size=(6, DIM)).astype(np.float32)
+    res = db.dsq_batch(q, ["/a/", "/b/", "/", "/a/", "/b/", "/"], k=10,
+                       precision="int8")
+    acct = res[0].batch
+    assert acct.db_bytes_fp32 == db.store.nbytes()
+    assert acct.db_bytes_int8 == db.store.q_nbytes()
+    assert acct.db_bytes_int8 < 0.30 * acct.db_bytes_fp32
+    # 3 unique scan scopes x 2 requests each x rescore_k=40
+    assert acct.rescore_candidates == 6 * 40
+    assert acct.precision_groups.get("int8") == 3
+    # default-precision batches carry no quantized terms
+    res_fp = db.dsq_batch(q, ["/a/"] * 6, k=10)
+    assert res_fp[0].batch.db_bytes_int8 == 0
+    assert res_fp[0].batch.rescore_candidates == 0
+    assert "int8" not in res_fp[0].batch.precision_groups
+
+
+def test_dsq_rejects_unknown_precision():
+    db = DirectoryVectorDB(dim=DIM)
+    db.ingest(RNG.normal(size=(10, DIM)).astype(np.float32), ["/a/"] * 10)
+    db.build_ann("flat")
+    q = RNG.normal(size=DIM).astype(np.float32)
+    with pytest.raises(ValueError, match="precision"):
+        db.dsq(q, "/a/", precision="int4")
+    with pytest.raises(ValueError, match="precision"):
+        db.dsq_batch(q[None, :], ["/a/"], precision="fp16")
+
+
+def test_serving_surfaces_quantized_stats():
+    from repro.serving.rag import ContextDatabase, RAGConfig
+    ctx = ContextDatabase(dim=DIM)
+    for i in range(300):
+        ctx.add_context(RNG.normal(size=DIM).astype(np.float32),
+                        f"/docs/{i % 3}/", "L0",
+                        np.arange(4) + i)
+    ctx.build("flat")
+    cfg = RAGConfig(k=5, precision="int8")
+    hits, stats = ctx.retrieve(RNG.normal(size=DIM).astype(np.float32),
+                               "/docs/", cfg)
+    assert len(hits) == 5
+    assert stats["db_bytes_int8"] < 0.30 * stats["db_bytes_fp32"]
+    assert stats["rescore_candidates"] >= 20

@@ -70,3 +70,12 @@ def test_recall_per_strategy(ds_name, strategy):
     assert _recall(ds, gt, db, "sharded") == 1.0
     assert _recall(ds, gt, db, "ivf", nprobe=7) >= 0.95
     assert _recall(ds, gt, db, "pg", ef_search=128) >= 0.95
+
+    # int8 two-phase (quantized scan/gather -> exact fp32 rescore): the
+    # exact executors stay near-exact through the default rescore window,
+    # the approximate ones keep their fp32 floors
+    assert _recall(ds, gt, db, "flat", precision="int8") >= 0.99
+    assert _recall(ds, gt, db, "sharded", precision="int8") >= 0.99
+    assert _recall(ds, gt, db, "ivf", nprobe=7, precision="int8") >= 0.95
+    assert _recall(ds, gt, db, "pg", ef_search=128,
+                   precision="int8") >= 0.95

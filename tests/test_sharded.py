@@ -236,7 +236,69 @@ def test_dryrun_sharded_scan_lowers():
     assert compiled is not None
 
 
+def test_sharded_int8_two_phase_matches_flat_int8():
+    """sharded int8 (shard-local int8 scan + shard-merge + one global fp32
+    rescore) must return the same top-k sets and fp32 scores as the flat
+    int8 path, and — with an exhaustive rescore window — the exact fp32
+    result."""
+    db, rng = _mixed_db()
+    B, d = 8, 16
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    scopes = [["/a/", "/", "/a/b2/"][i % 3] for i in range(B)]
+    exact = db.dsq_batch(q, scopes, k=5, executor="sharded")
+    for rk in (64, len(db.store)):
+        sh = db.dsq_batch(q, scopes, k=5, executor="sharded",
+                          precision="int8", rescore_k=rk)
+        fl = db.dsq_batch(q, scopes, k=5, executor="flat",
+                          precision="int8", rescore_k=rk)
+        for a, b in zip(sh, fl):
+            assert (set(int(x) for x in a.ids[0])
+                    == set(int(x) for x in b.ids[0]))
+            np.testing.assert_allclose(np.sort(a.scores[0]),
+                                       np.sort(b.scores[0]),
+                                       rtol=1e-5, atol=1e-5)
+    for a, b in zip(sh, exact):
+        assert (set(int(x) for x in a.ids[0])
+                == set(int(x) for x in b.ids[0]))
+    acct = sh[0].batch
+    assert acct.db_bytes_int8 and acct.rescore_candidates
+
+
 # --------------------------------------------------------------- multidevice
+@pytest.mark.multidevice
+def test_sharded_int8_8dev():
+    """8-shard int8 scan: per-shard top-r merge + global rescore equals the
+    fp32 exact result under an exhaustive window, tombstones stay masked."""
+    run_with_devices("""
+        import numpy as np
+        from repro.vectordb import DirectoryVectorDB
+        rng = np.random.default_rng(5)
+        db = DirectoryVectorDB(dim=16, scope_strategy="triehi")
+        paths = [f"/a/b{i % 5}/" if i % 2 else "/c/" for i in range(900)]
+        db.ingest(rng.normal(size=(900, 16)).astype(np.float32), paths)
+        db.build_ann("flat")
+        db.build_ann("sharded")
+        assert db.executors["sharded"].n_shards == 8
+        q = rng.normal(size=(6, 16)).astype(np.float32)
+        scopes = [["/a/", "/", "/c/"][i % 3] for i in range(6)]
+        exact = db.dsq_batch(q, scopes, k=5, executor="sharded")
+        sh = db.dsq_batch(q, scopes, k=5, executor="sharded",
+                          precision="int8", rescore_k=900)
+        for a, b in zip(sh, exact):
+            assert (set(int(x) for x in a.ids[0])
+                    == set(int(x) for x in b.ids[0])), (a.ids, b.ids)
+        # tombstoned rows never resurface from the int8 mesh scan
+        dead = [int(x) for x in exact[1].ids[0][:2]]
+        for eid in dead:
+            db.delete(eid)
+        after = db.dsq_batch(q, scopes, k=5, executor="sharded",
+                             precision="int8", rescore_k=900)
+        got = {int(x) for r in after for x in r.ids[0]}
+        assert not (got & set(dead))
+        print("ok")
+    """)
+
+
 @pytest.mark.multidevice
 def test_sharded_batch_bit_identical_8dev():
     """The acceptance contract: on an 8-host-device mesh, dsq_batch
