@@ -14,11 +14,16 @@ SCALE = 0.01          # of the published dataset sizes; override via env/CLI
 DIM = 64
 
 
-def datasets(scale: float = SCALE, dim: int = DIM):
+def datasets(scale: float = SCALE, dim: int = DIM,
+             anchor_zipf: float = 0.0):
+    """Dataset twins at benchmark scale. ``anchor_zipf > 0`` Zipf-skews the
+    query anchors toward hot directories (``dirgen._anchor_sampler``) —
+    the default draws are unchanged."""
     return {
-        "WIKI-Dir": make_wiki_dir(scale=scale, dim=dim, n_queries=64, seed=0),
+        "WIKI-Dir": make_wiki_dir(scale=scale, dim=dim, n_queries=64, seed=0,
+                                  anchor_zipf=anchor_zipf),
         "ARXIV-Dir": make_arxiv_dir(scale=scale, dim=dim, n_queries=64,
-                                    seed=1),
+                                    seed=1, anchor_zipf=anchor_zipf),
     }
 
 

@@ -219,3 +219,46 @@ print(f"int8 store {acct.db_bytes_int8}B vs fp32 {acct.db_bytes_fp32}B "
       f"recall@3 vs exact = {recall(exact, quant):.2f} "
       f"(rescore_k=n would be exact by construction; at benchmark scale "
       f"the default 4k window already holds recall@10 >= 0.99)")
+
+# --- PQ/ADC tier + tiered fp32 storage: past the device byte budget ---------
+# precision="pq" ranks against product-quantized codes: M uint8 codes per row
+# (256 k-means centroids per subspace, codebook trained once on first use and
+# frozen — new rows encode incrementally, tombstones mask out like any other
+# precision). That is ~1/16 of the fp32 bytes by default, and scoring is a
+# per-query LUT gather-accumulate (no GEMM), so the scan wall-clock win holds
+# on every backend (EXPERIMENTS.md §PQ/ADC roofline). Same two-phase
+# contract as int8: exact fp32 gather-rescore ranks the final top-k.
+print("\n=== PQ/ADC tier: dsq_batch(precision='pq') ===")
+pq = db.dsq_batch(queries, scopes, k=3, precision="pq")
+acct = pq[0].batch
+print(f"pq codes {acct.db_bytes_pq}B vs fp32 {acct.db_bytes_fp32}B "
+      f"({acct.db_bytes_pq / max(acct.db_bytes_fp32, 1):.3f}x), "
+      f"groups {acct.precision_groups}, "
+      f"recall@3 vs exact = {recall(exact, pq):.2f}")
+
+# Tiered storage: grow the corpus past a device byte budget and it STILL
+# serves — codes (plus the 256*dim*4-byte codebook) stay device-resident,
+# fp32 rows demote to host RAM, default-precision requests auto-upgrade to
+# the PQ scan, and only the rescore window's rows are fetched host->device.
+# The planner's cumulative scope heat pins the hottest directories' fp32
+# rows back on device, so a skewed workload converges toward device-speed
+# serving.
+print("\n=== tiered storage: corpus larger than the device budget ===")
+db.ingest(rng.normal(size=(2000, DIM)).astype(np.float32),
+          ["/HR/Reports/"] * 2000)               # outgrow the device
+exact = db.dsq_batch(queries, scopes, k=3)       # fully resident baseline
+db.store.set_device_budget(db.store.alive_nbytes() // 2)
+# fp32 requests, pq scan under the hood; rescore_k widens the exact-rescore
+# window (the codebook froze before the 2000-row ingest, so the coarser
+# codes on the new rows want a bigger window)
+cold = db.dsq_batch(queries, scopes, k=3, rescore_k=64)
+warm = db.dsq_batch(queries, scopes, k=3, rescore_k=64)   # hot scopes pinned
+a_cold, a_warm = cold[0].batch, warm[0].batch
+print(f"budget {db.store.device_budget}B for "
+      f"{db.store.alive_nbytes()}B of fp32 rows: "
+      f"groups {a_cold.precision_groups} (auto-upgraded), "
+      f"rescore fetch {a_cold.rescore_fetch_bytes}B cold -> "
+      f"{a_warm.rescore_fetch_bytes}B warm, "
+      f"{a_warm.rows_device_pinned} rows pinned / {a_warm.rows_host} on host, "
+      f"recall@3 vs exact = {recall(exact, warm):.2f}")
+db.store.set_device_budget(None)                 # back to fully device-resident

@@ -78,6 +78,32 @@ def _zipf_assign(rng: np.random.Generator, n_entries: int,
     return rng.choice(len(dirs), size=n_entries, p=weights)
 
 
+def _anchor_sampler(rng: np.random.Generator, assign: np.ndarray,
+                    anchor_zipf: float):
+    """Per-query entry sampler implementing the hot/cold directory-skew
+    knob. ``anchor_zipf == 0`` keeps the original uniform-over-entries
+    draw; ``> 0`` draws the query's anchor *directory* Zipf-weighted (a few
+    hot directories absorb most of the query traffic — the access pattern
+    tiered storage exploits by pinning hot scopes' fp32 rows on device),
+    then a uniform entry within it."""
+    n_entries = len(assign)
+    if anchor_zipf <= 0:
+        return lambda: int(rng.integers(n_entries))
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    occupied = np.unique(sorted_assign)
+    ranks = rng.permutation(len(occupied))
+    w = 1.0 / np.power(ranks + 1.0, anchor_zipf)
+    w /= w.sum()
+
+    def draw() -> int:
+        d = occupied[rng.choice(len(occupied), p=w)]
+        lo = np.searchsorted(sorted_assign, d)
+        hi = np.searchsorted(sorted_assign, d, side="right")
+        return int(order[rng.integers(lo, hi)])
+    return draw
+
+
 def _mixture_vectors(rng: np.random.Generator, entry_dirs: Sequence[P.Path],
                      dim: int, noise: float = 0.35
                      ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
@@ -128,9 +154,11 @@ def _sample_dsm_ops(rng: np.random.Generator, dirs: List[P.Path],
 
 
 def make_wiki_dir(scale: float = 0.01, dim: int = 128, n_queries: int = 64,
-                  seed: int = 0) -> DirDataset:
+                  seed: int = 0, anchor_zipf: float = 0.0) -> DirDataset:
     """WIKI-Dir twin. scale=1.0 reproduces the published sizes
-    (363,467 dirs / 1.94 M entries); default scale fits CI."""
+    (363,467 dirs / 1.94 M entries); default scale fits CI.
+    ``anchor_zipf > 0`` Zipf-skews which directories the queries anchor in
+    (hot/cold scope access; see :func:`_anchor_sampler`)."""
     rng = np.random.default_rng(seed)
     n_dirs = max(50, int(363_467 * scale))
     n_entries = max(200, int(1_940_000 * scale))
@@ -138,10 +166,11 @@ def make_wiki_dir(scale: float = 0.01, dim: int = 128, n_queries: int = 64,
     assign = _zipf_assign(rng, n_entries, dirs)
     entry_dirs = [dirs[i] for i in assign]
     vectors, _ = _mixture_vectors(rng, entry_dirs, dim)
+    draw = _anchor_sampler(rng, assign, anchor_zipf)
     # queries anchored at ancestors of real entries, at varying depths
     anchors, recursive, qvecs = [], [], []
     for _ in range(n_queries):
-        ei = int(rng.integers(n_entries))
+        ei = draw()
         path = entry_dirs[ei]
         depth = int(rng.integers(0, len(path) + 1))
         anchors.append(P.to_str(path[:depth]))
@@ -159,9 +188,11 @@ def make_wiki_dir(scale: float = 0.01, dim: int = 128, n_queries: int = 64,
 
 
 def make_arxiv_dir(scale: float = 0.01, dim: int = 128, n_queries: int = 64,
-                   seed: int = 1) -> DirDataset:
+                   seed: int = 1, anchor_zipf: float = 0.0) -> DirDataset:
     """ARXIV-Dir twin: primary namespace = subject tree (shallow, 168 dirs at
-    scale 1), extra namespace "time" = temporal tree (432 dirs)."""
+    scale 1), extra namespace "time" = temporal tree (432 dirs).
+    ``anchor_zipf``: hot/cold query-anchor skew, as in
+    :func:`make_wiki_dir`."""
     rng = np.random.default_rng(seed)
     n_subject = max(20, int(168 * max(scale, 0.25)))
     n_time = max(24, int(432 * max(scale, 0.25)))
@@ -175,9 +206,10 @@ def make_arxiv_dir(scale: float = 0.01, dim: int = 128, n_queries: int = 64,
     entry_subject = [subject[i] for i in s_assign]
     entry_time = [temporal[i] for i in t_assign]
     vectors, _ = _mixture_vectors(rng, entry_subject, dim)
+    draw = _anchor_sampler(rng, s_assign, anchor_zipf)
     anchors, recursive, qvecs = [], [], []
     for _ in range(n_queries):
-        ei = int(rng.integers(n_entries))
+        ei = draw()
         path = entry_subject[ei]
         depth = int(rng.integers(0, len(path) + 1))
         anchors.append(P.to_str(path[:depth]))

@@ -242,6 +242,58 @@ def make_sharded_batch_search_i8(mesh: Mesh, n_total: int, dim: int, r: int,
     return jax.jit(fn)
 
 
+def make_sharded_batch_search_pq(mesh: Mesh, n_total: int, m: int, r: int):
+    """PQ/ADC scan phase of the two-phase sharded plan.
+
+    Each shard scores its slice of the *uint8 PQ codes* — ``m`` bytes per
+    row instead of ``4*dim`` — by summing per-query LUT entries, keeps its
+    local top-``r`` (``r`` = rescore_k), and the shard-order merge
+    replicates a global top-``r`` candidate set. The caller then runs ONE
+    exact fp32 gather-rescore over the merged candidates from the host
+    store, so the mesh never touches fp32 rows on the scan path at all.
+
+    pqdb  : (n_total, m) uint8        PQ codes, sharded row-wise over axes
+    words : (n_scopes, n_total/32)    packed scope table, sharded on words
+    alive : (n_total/32,) uint32      packed alive/in-range mask, sharded
+    sids  : (q,) int32                replicated; row into ``words``
+    lut   : (q, m, 256) float32       per-query ADC tables, replicated —
+                                      the metric is folded in by
+                                      ``PQCodebook.lut`` so this builder
+                                      takes no metric argument
+
+    Returns (ADC-phase scores (q, r), global ids (q, r)) replicated; the
+    scores are approximations (callers rescore, not rank, by them). Scoring
+    uses the same per-subspace take-accumulate loop as the single-device
+    twin (``flat._adc_scores``): no (q, n_loc, m) fp32 intermediate."""
+    axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    assert n_total % n_dev == 0, (n_total, n_dev)
+    n_loc = n_total // n_dev
+    assert n_loc % 32 == 0, (n_loc, "local rows must be word-aligned")
+    assert 0 < r <= n_loc, (r, n_loc, "per-shard top-r must fit local rows")
+
+    def local_search(pqdb_l, words_l, alive_l, sids, lut):
+        c = pqdb_l.astype(jnp.int32)                         # (n_loc, m)
+        scores = jnp.take(lut[:, 0, :], c[:, 0], axis=1)     # (q, n_loc)
+        for mm in range(1, m):
+            scores = scores + jnp.take(lut[:, mm, :], c[:, mm], axis=1)
+        from ..kernels.ref import unpack_words_ref
+        qwords = jnp.take(words_l, sids, axis=0) & alive_l[None, :]
+        valid = unpack_words_ref(qwords, n_loc)              # (q, n_loc)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        v, i = jax.lax.top_k(scores, r)
+        return _merge_local_topk(v, i, axes, n_dev, n_loc, r)
+
+    fn = compat.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(P(axes, None), P(None, axes), P(axes), P(None),
+                  P(None, None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
 def search_input_specs(mesh: Mesh, n_total: int, dim: int, n_queries: int,
                        dtype=jnp.bfloat16):
     """ShapeDtypeStructs + shardings for the dry-run of the scan step."""

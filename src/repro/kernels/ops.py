@@ -18,8 +18,10 @@ from .flash_decode import flash_decode as _flash_decode
 from .scoped_topk import ivf_gather_topk as _ivf_gather_topk
 from .scoped_topk import multi_scope_topk as _multi_scope_topk
 from .scoped_topk import multi_scope_topk_i8 as _multi_scope_topk_i8
+from .scoped_topk import multi_scope_topk_pq as _multi_scope_topk_pq
 from .scoped_topk import scoped_topk as _scoped_topk
 from .scoped_topk import scoped_topk_i8 as _scoped_topk_i8
+from .scoped_topk import scoped_topk_pq as _scoped_topk_pq
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
@@ -108,6 +110,55 @@ def multi_scope_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask_words,
     vals, ids = _multi_scope_topk_i8(qp, qsp, rp, rsp, sqp, wp, sp, k=k,
                                      block_q=block_q, block_n=block_n,
                                      metric=metric, interpret=interpret)
+    return vals[:nq], ids[:nq]
+
+
+def scoped_topk_pq(lut, codes, mask, k: int = 10,
+                   block_q: int = 8, block_n: int = 1024,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Masked top-k over the PQ code store (the ADC scan phase of the
+    two-phase PQ plan); pads q/n to block multiples, unpads results. The
+    LUT folds the metric in, so there is no metric argument. Row-axis
+    padding is code-0 rows with a 0 mask bit — never a candidate."""
+    interpret = _INTERPRET if interpret is None else interpret
+    lut = jnp.asarray(lut, dtype=jnp.float32)
+    codes = jnp.asarray(codes, dtype=jnp.uint8)
+    block_n = min(block_n, max(128, codes.shape[0]))
+    block_q = min(block_q, max(1, lut.shape[0]))
+    lp, nq = _pad_to(lut, 0, block_q)
+    cp, _ = _pad_to(codes, 0, block_n)
+    mp, _ = _pad_to(jnp.asarray(mask).astype(jnp.int8), 0, block_n, value=0)
+    vals, ids = _scoped_topk_pq(lp, cp, mp, k=k, block_q=block_q,
+                                block_n=block_n, interpret=interpret)
+    return vals[:nq], ids[:nq]
+
+
+def multi_scope_topk_pq(lut, codes, mask_words, scope_ids, k: int = 10,
+                        block_q: int = 8, block_n: int = 1024,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch heterogeneous masked top-k over the PQ code store:
+    packed (n_scopes, n/32) scope-mask indirection like
+    :func:`multi_scope_topk`, ADC LUT gather-accumulate scoring like
+    :func:`scoped_topk_pq`. Pads q to block_q, n (codes + mask words) to
+    block_n, unpads results."""
+    interpret = _INTERPRET if interpret is None else interpret
+    lut = jnp.asarray(lut, dtype=jnp.float32)
+    codes = jnp.asarray(codes, dtype=jnp.uint8)
+    mask_words = jnp.asarray(mask_words, dtype=jnp.uint32)
+    scope_ids = jnp.asarray(scope_ids, dtype=jnp.int32)
+    block_n = min(block_n, max(128, codes.shape[0]))
+    block_n = ((block_n + 31) // 32) * 32
+    block_q = min(block_q, max(1, lut.shape[0]))
+    lp, nq = _pad_to(lut, 0, block_q)
+    cp, n = _pad_to(codes, 0, block_n)
+    want_words = cp.shape[0] // 32
+    wp = jnp.pad(mask_words,
+                 [(0, 0), (0, want_words - mask_words.shape[1])])
+    sp, _ = _pad_to(scope_ids, 0, block_q, value=0)
+    vals, ids = _multi_scope_topk_pq(lp, cp, wp, sp, k=k, block_q=block_q,
+                                     block_n=block_n, interpret=interpret)
     return vals[:nq], ids[:nq]
 
 
@@ -208,6 +259,7 @@ def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
     return _flash_decode(q, kp, vp, mp, block_s=block_s, interpret=interpret)
 
 
-__all__ = ["scoped_topk", "scoped_topk_i8", "multi_scope_topk",
-           "multi_scope_topk_i8", "ivf_gather_topk", "mask_and_popcount",
-           "bitmap_patch", "flash_decode", "ref"]
+__all__ = ["scoped_topk", "scoped_topk_i8", "scoped_topk_pq",
+           "multi_scope_topk", "multi_scope_topk_i8", "multi_scope_topk_pq",
+           "ivf_gather_topk", "mask_and_popcount", "bitmap_patch",
+           "flash_decode", "ref"]

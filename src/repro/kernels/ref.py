@@ -145,6 +145,49 @@ def multi_scope_topk_i8_ref(q_i8: np.ndarray, q_scale: np.ndarray,
     return vals, ids.astype(np.int32)
 
 
+def _pq_scores_np(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """(q, n) fp32 ADC scores: each row's score is the sum over subspaces of
+    the LUT entry its code selects. ``lut`` (q, M, 256) fp32 with the metric
+    already folded in (see ``vectordb.quant.PQCodebook.lut`` — for l2 the
+    table holds ``2 q.c - |c|^2`` so the sum is the scan's larger-is-better
+    l2 identity); ``codes`` (n, M) uint8."""
+    lut = np.asarray(lut, dtype=np.float32)
+    codes = np.asarray(codes)
+    m = codes.shape[1]
+    sel = lut[:, np.arange(m)[None, :], codes.astype(np.int64)]  # (q, n, M)
+    return sel.sum(axis=2).astype(np.float32)
+
+
+def scoped_topk_pq_ref(lut: np.ndarray, codes: np.ndarray, mask: np.ndarray,
+                       k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+    """Unfused numpy oracle for the PQ/ADC scan phase of ``scoped_topk_pq``:
+    full (q, n) ADC score matrix, mask, stable sort. Metric-free — the LUT
+    carries it."""
+    scores = _pq_scores_np(lut, codes)
+    scores = np.where(np.asarray(mask, bool)[None, :], scores, NEG_INF)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(scores, order, axis=1).astype(np.float32)
+    ids = np.where(vals <= NEG_INF, -1, order)
+    return vals, ids.astype(np.int32)
+
+
+def multi_scope_topk_pq_ref(lut: np.ndarray, codes: np.ndarray,
+                            mask_words: np.ndarray, scope_ids: np.ndarray,
+                            k: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+    """Unfused numpy oracle for the heterogeneous-batch ADC scan: every
+    query row indirects through ``scope_ids`` into the packed mask matrix,
+    scores as :func:`scoped_topk_pq_ref`."""
+    n = codes.shape[0]
+    scores = _pq_scores_np(lut, codes)
+    masks = _unpack_words_np(mask_words, n)               # (n_scopes, n)
+    valid = masks[np.asarray(scope_ids, np.int64)]        # (q, n)
+    scores = np.where(valid, scores, NEG_INF)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    vals = np.take_along_axis(scores, order, axis=1).astype(np.float32)
+    ids = np.where(vals <= NEG_INF, -1, order)
+    return vals, ids.astype(np.int32)
+
+
 def mask_and_popcount_ref(a: jax.Array, b: jax.Array
                           ) -> Tuple[jax.Array, jax.Array]:
     words = a & b

@@ -210,6 +210,83 @@ def _multi_kernel_i8(q_ref, qs_ref, x_ref, rs_ref, sq_ref, words_ref, sid_ref,
         ids_ref[...] = acc_i[...]
 
 
+def _adc_tile_scores(lut, codes, block_n: int):
+    """(block_q, block_n) ADC scores of one code tile: flatten the per-query
+    (M, 256) LUT to M*256 lanes, offset each subspace's uint8 code into its
+    own 256-entry bank, gather, and reduce over M — all in VMEM, so the scan
+    never touches fp32 rows and streams only 1 byte per row per subspace.
+    The LUT already folds the metric in (quant.PQCodebook.lut), so the
+    kernel is metric-free."""
+    block_q, m, _ = lut.shape
+    flat = lut.reshape(block_q, m * 256)
+    idx = codes.astype(jnp.int32) + (
+        jnp.arange(m, dtype=jnp.int32) * 256)[None, :]        # (block_n, m)
+    g = jnp.take(flat, idx.reshape(-1), axis=1)               # (q, n*m)
+    return g.reshape(block_q, block_n, m).sum(axis=2)
+
+
+def _kernel_pq(lut_ref, x_ref, mask_ref, vals_ref, ids_ref,
+               acc_v, acc_i, *, k: int, block_n: int):
+    """PQ/ADC twin of :func:`_kernel`: the streamed HBM->VMEM tile is the
+    (block_n, M) uint8 code tile — 1/16 of the fp32 bytes at dsub=4 — and
+    scoring is a per-query LUT gather-accumulate instead of a GEMM."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    scores = _adc_tile_scores(lut_ref[...], x_ref[...], block_n)
+    mask = mask_ref[...] != 0                                 # (block_n,)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    base = ni * block_n
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    ids = jnp.where(mask[None, :], ids, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
+def _multi_kernel_pq(lut_ref, x_ref, words_ref, sid_ref, vals_ref, ids_ref,
+                     acc_v, acc_i, *, k: int, block_n: int):
+    """PQ/ADC twin of :func:`_multi_kernel`: LUT gather-accumulate scoring
+    with the packed scope-mask words expanded in-register exactly as the
+    fp32 kernel does."""
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG_INF)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    scores = _adc_tile_scores(lut_ref[...], x_ref[...], block_n)
+    words = words_ref[...]                                    # (n_scopes, bw)
+    sid = sid_ref[...]                                        # (block_q,)
+    qwords = jnp.take(words, sid, axis=0)                     # (block_q, bw)
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    qbits = jnp.take_along_axis(qwords, col >> 5, axis=1)
+    mask = (qbits >> (col & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = mask != 0                                          # (block_q, block_n)
+    scores = jnp.where(mask, scores, NEG_INF)
+    base = ni * block_n
+    ids = base + col
+    ids = jnp.where(mask, ids, -1)
+    new_v, new_i = _merge_topk(acc_v[...], acc_i[...], scores, ids, k)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(ni == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        ids_ref[...] = acc_i[...]
+
+
 def _ivf_kernel(q_ref, x_ref, cid_ref, w_ref, vals_ref, ids_ref,
                 acc_v, acc_i, *, k: int, metric: str):
     """Batched-IVF back half: stream one query's probed candidate tiles
@@ -457,6 +534,100 @@ def multi_scope_topk_i8(q_i8: jax.Array, q_scale: jax.Array,
       rows_i8.astype(jnp.int8), row_scale.astype(jnp.float32),
       sq.astype(jnp.float32), mask_words.astype(jnp.uint32),
       scope_ids.astype(jnp.int32))
+    return vals, ids
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "interpret"))
+def scoped_topk_pq(lut: jax.Array, codes: jax.Array, mask: jax.Array,
+                   k: int = 10, block_q: int = 8, block_n: int = 1024,
+                   interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Fused masked top-k over the PQ code store (ADC scan phase).
+
+    lut (q, M, 256) f32 per-query ADC tables (metric folded in — see
+    ``vectordb.quant.PQCodebook.lut``); codes (n, M) uint8; mask (n,)
+    int8/bool. Returns (values (q, k) f32 descending, ids (q, k) int32;
+    -1 = no candidate). Same block-multiple preconditions as
+    :func:`scoped_topk` (ops.py pads). No metric argument: the LUT is the
+    metric.
+    """
+    nq, m, n_cent = lut.shape
+    n = codes.shape[0]
+    assert n_cent == 256 and codes.shape[1] == m, (lut.shape, codes.shape)
+    assert nq % block_q == 0 and n % block_n == 0, (nq, n, block_q, block_n)
+    grid = (nq // block_q, n // block_n)
+    kernel = functools.partial(_kernel_pq, k=k, block_n=block_n)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, m, 256), lambda qi, ni: (qi, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((block_n,), lambda qi, ni: (ni,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lut.astype(jnp.float32), codes.astype(jnp.uint8),
+      mask.astype(jnp.int8))
+    return vals, ids
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_q", "block_n", "interpret"))
+def multi_scope_topk_pq(lut: jax.Array, codes: jax.Array,
+                        mask_words: jax.Array, scope_ids: jax.Array,
+                        k: int = 10, block_q: int = 8, block_n: int = 1024,
+                        interpret: bool = True
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Single-launch heterogeneous masked top-k over the PQ code store: the
+    packed-mask scope-id indirection of :func:`multi_scope_topk` with the
+    ADC LUT gather-accumulate scoring of :func:`scoped_topk_pq`."""
+    nq, m, n_cent = lut.shape
+    n = codes.shape[0]
+    n_scopes, n_words = mask_words.shape
+    assert n_cent == 256 and codes.shape[1] == m, (lut.shape, codes.shape)
+    assert nq % block_q == 0 and n % block_n == 0, (nq, n, block_q, block_n)
+    assert block_n % 32 == 0 and n_words * 32 == n, (block_n, n_words, n)
+    grid = (nq // block_q, n // block_n)
+    bw = block_n // 32
+    kernel = functools.partial(_multi_kernel_pq, k=k, block_n=block_n)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, m, 256), lambda qi, ni: (qi, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda qi, ni: (ni, 0)),
+            pl.BlockSpec((n_scopes, bw), lambda qi, ni: (0, ni)),
+            pl.BlockSpec((block_q,), lambda qi, ni: (qi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ni: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lut.astype(jnp.float32), codes.astype(jnp.uint8),
+      mask_words.astype(jnp.uint32), scope_ids.astype(jnp.int32))
     return vals, ids
 
 

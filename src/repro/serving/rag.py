@@ -44,8 +44,8 @@ class RAGConfig:
     token_budget: int = 512
     escalate_top: int = 3            # top hits get L2 bodies
     executor: str = "flat"
-    precision: str = "fp32"          # "int8": two-phase quantized ranking
-    rescore_k: Optional[int] = None  # int8-phase candidates (default 4k)
+    precision: str = "fp32"          # "int8"/"pq": two-phase approx ranking
+    rescore_k: Optional[int] = None  # approx-phase candidates (default 4k)
 
 
 class ContextDatabase:
@@ -107,6 +107,16 @@ class ContextDatabase:
                 stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
                 stats["db_bytes_int8"] = res.batch.db_bytes_int8
                 stats["rescore_candidates"] = res.batch.rescore_candidates
+            if res.batch is not None and res.batch.db_bytes_pq:
+                stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
+                stats["db_bytes_pq"] = res.batch.db_bytes_pq
+                stats["rescore_candidates"] = res.batch.rescore_candidates
+            if res.batch is not None and res.batch.rows_host:
+                # tiered placement: where the fp32 rows live and what the
+                # exact rescore actually pulled host->device this batch
+                stats["rescore_fetch_bytes"] = res.batch.rescore_fetch_bytes
+                stats["rows_device_pinned"] = res.batch.rows_device_pinned
+                stats["rows_host"] = res.batch.rows_host
             out.append((hits, stats))
         return out
 

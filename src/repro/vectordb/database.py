@@ -49,13 +49,16 @@ class DSQResult:
 class DirectoryVectorDB:
     def __init__(self, dim: int, metric: str = "ip",
                  scope_strategy: str = "triehi",
-                 journal_path: Optional[str] = None):
+                 journal_path: Optional[str] = None,
+                 pq_m: Optional[int] = None):
         """``journal_path`` makes every namespace's DSM executor journal to
         ``{journal_path}.{namespace}``. Reopening an existing journal
         continues its sequence numbers from the persisted tail; after the
         caller restores index state on restart, :meth:`recover` replays any
-        op whose COMMIT was lost to a crash."""
-        self.store = VectorStore(dim, metric)
+        op whose COMMIT was lost to a crash. ``pq_m`` overrides the PQ
+        subspace count (default: the largest divisor of ``dim`` at or
+        below ``dim // 4``)."""
+        self.store = VectorStore(dim, metric, pq_m=pq_m)
         self.scope_strategy = scope_strategy
         self.namespaces: Dict[str, ScopeIndex] = {}
         self.executors: Dict[str, object] = {}
@@ -146,10 +149,18 @@ class DirectoryVectorDB:
             **executor_params) -> DSQResult:
         """``precision="int8"`` runs the executor's two-phase quantized plan
         (int8 scan/gather keeps ``rescore_k >= k`` candidates, exact fp32
-        gather-rescore ranks the final top-k). The default fp32 path is
-        byte-for-byte the pre-knob behavior."""
-        if precision not in ("fp32", "int8"):
-            raise ValueError(f"precision {precision!r} not in (fp32, int8)")
+        gather-rescore ranks the final top-k); ``precision="pq"`` the PQ/ADC
+        twin (uint8 product-quantized codes, ~1/16 of the fp32 bytes). The
+        default fp32 path is byte-for-byte the pre-knob behavior — unless a
+        device byte budget is configured and exceeded
+        (``store.set_device_budget``), in which case fp32 requests upgrade
+        to the PQ plan: the fp32 rows live in host RAM and only the rescore
+        window's candidates are fetched to the device."""
+        if precision not in ("fp32", "int8", "pq"):
+            raise ValueError(
+                f"precision {precision!r} not in (fp32, int8, pq)")
+        if precision == "fp32" and self.store.tiered_active():
+            precision = "pq"
         idx = self.namespaces[namespace]
         stats = ResolveStats()
         t0 = time.perf_counter_ns()
@@ -215,9 +226,18 @@ class DirectoryVectorDB:
         quantize; gather groups only when they outsize the rescore window),
         int8 scan groups share one quantized-store launch plus one exact
         fp32 gather-rescore, and ``DSQResult.batch`` reports the fp32/int8
-        store bytes and rescored candidate counts."""
-        if precision not in ("fp32", "int8"):
-            raise ValueError(f"precision {precision!r} not in (fp32, int8)")
+        store bytes and rescored candidate counts. ``precision="pq"`` plans
+        identically on the PQ/ADC tier (uint8 codes, per-query LUT scan,
+        same exact rescore). When the store is over its configured device
+        byte budget, fp32 batches upgrade to the PQ plan automatically —
+        the tiered-storage serving mode — and ``DSQResult.batch`` addition-
+        ally reports the host->device rescore fetch bytes and the
+        device-pinned vs host-resident row placement."""
+        if precision not in ("fp32", "int8", "pq"):
+            raise ValueError(
+                f"precision {precision!r} not in (fp32, int8, pq)")
+        if precision == "fp32" and self.store.tiered_active():
+            precision = "pq"
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         B = queries.shape[0]
         if len(paths) != B:
@@ -258,7 +278,7 @@ class DirectoryVectorDB:
                                 acct, rescore_k)
             # ONE launch per precision for every scan-plan request in the
             # batch (a pure-fp32 or pure-int8 batch stays one launch)
-            for prec in ("fp32", "int8"):
+            for prec in ("fp32", "int8", "pq"):
                 scan_groups = [g for g in groups
                                if g.plan == "scan" and g.precision == prec]
                 if not scan_groups:
@@ -271,7 +291,7 @@ class DirectoryVectorDB:
                 out_scores[rows] = s
                 out_ids[rows] = i
                 acct.launches += 1
-                if prec == "int8":
+                if prec in ("int8", "pq"):
                     acct.rescore_candidates += len(rows) * resolve_rescore_k(
                         k, rescore_k, len(self.store))
 
@@ -299,7 +319,7 @@ class DirectoryVectorDB:
             out_scores[rows] = s
             out_ids[rows] = i
             acct.launches += 1
-            if g.precision == "int8":
+            if g.precision in ("int8", "pq"):
                 acct.rescore_candidates += len(rows) * resolve_rescore_k(
                     k, rescore_k, g.scope_size)
 
@@ -336,11 +356,21 @@ class DirectoryVectorDB:
         acct.directory_ns = t1 - t0
         out_scores = np.full((B, k), -np.inf, np.float32)
         out_ids = np.full((B, k), -1, np.int64)
+        fetch0 = self.store.rescore_fetch_bytes
         launch(groups, out_scores, out_ids, acct)
         acct.ann_ns = time.perf_counter_ns() - t1
+        # resident-store byte terms are *alive-row* bytes: tombstoned rows
+        # still occupy buffer slots but are not part of the serving corpus
         if any(g.precision == "int8" for g in groups):
-            acct.db_bytes_fp32 = self.store.nbytes()
-            acct.db_bytes_int8 = self.store.q_nbytes()
+            acct.db_bytes_fp32 = self.store.alive_nbytes()
+            acct.db_bytes_int8 = self.store.q_alive_nbytes()
+        if any(g.precision == "pq" for g in groups):
+            acct.db_bytes_fp32 = self.store.alive_nbytes()
+            acct.db_bytes_pq = self.store.pq_nbytes()
+        acct.rescore_fetch_bytes = self.store.rescore_fetch_bytes - fetch0
+        if self.store.tiered_active():
+            self._update_hot_pins(namespace, groups)
+        acct.rows_device_pinned, acct.rows_host = self.store.placement()
 
         plan_of = {}
         for g in groups:
@@ -359,6 +389,38 @@ class DirectoryVectorDB:
                 plan=plan, scope_shared=len(g.request_idx), batch=acct))
         return results
 
+    def _update_hot_pins(self, namespace: str, groups) -> None:
+        """Scope-aware tiered placement: pin the hottest directories' fp32
+        rows device-resident. Heat is the planner's cumulative per-scope DSQ
+        request count (the access statistics it already collects); the pin
+        budget is whatever device capacity the PQ codes leave free. Runs
+        after every planned batch over that batch's resolved scopes, so the
+        pinned set tracks the live access distribution — a cold batch never
+        unpins rows hotter scopes claimed earlier, because heat is
+        cumulative and monotone."""
+        store = self.store
+        budget_rows = (store.device_budget - store.pq_nbytes()
+                       - store.pq_codebook_nbytes()) // (store.dim * 4)
+        if budget_rows <= 0:
+            store.pin_rows(np.empty(0, np.int64))
+            return
+        heat = self.planner(namespace).scope_access
+        ranked = sorted((g for g in groups if g.plan != "empty"),
+                        key=lambda g: heat.get(g.key, 0), reverse=True)
+        pinned: List[np.ndarray] = []
+        total = 0
+        for g in ranked:
+            ids = np.asarray(g.candidate_ids, np.int64)
+            room = budget_rows - total
+            if room <= 0:
+                break
+            if len(ids) > room:
+                ids = ids[:room]     # partial pin of the coldest admitted scope
+            pinned.append(ids)
+            total += len(ids)
+        store.pin_rows(np.unique(np.concatenate(pinned))
+                       if pinned else np.empty(0, np.int64))
+
     def _dsq_batch_sharded(self, ex, queries, paths, k, recursive, exclude,
                            namespace, use_pallas=False, precision="fp32",
                            rescore_k=None) -> List[DSQResult]:
@@ -373,7 +435,8 @@ class DirectoryVectorDB:
         launch has no fused-kernel variant."""
 
         def launch_sharded(groups, out_scores, out_ids, acct):
-            db0 = ex.view.db_bytes_uploaded + ex.view.q_bytes_uploaded
+            db0 = (ex.view.db_bytes_uploaded + ex.view.q_bytes_uploaded
+                   + ex.view.pq_bytes_uploaded)
             m0 = ex.mask_bytes_uploaded
             self._launch_gather(ex.flat, queries, k, groups, out_scores,
                                 out_ids, acct, rescore_k)
@@ -403,7 +466,7 @@ class DirectoryVectorDB:
                     depth = ex.phase_depth(k, prec, rescore_k)
                     acct.collective_bytes += (ex.n_shards * len(rows)
                                               * depth * 8)
-                    if prec == "int8":
+                    if prec in ("int8", "pq"):
                         acct.rescore_candidates += len(rows) * depth
                 else:
                     # store too small for a k-deep per-shard top-k: the
@@ -415,7 +478,7 @@ class DirectoryVectorDB:
                                                 k, use_pallas=use_pallas,
                                                 precision=prec,
                                                 rescore_k=rescore_k)
-                    if prec == "int8":
+                    if prec in ("int8", "pq"):
                         acct.rescore_candidates += len(rows) * (
                             resolve_rescore_k(k, rescore_k, len(self.store)))
                 out_scores[rows] = s
@@ -423,7 +486,8 @@ class DirectoryVectorDB:
                 acct.launches += 1
             acct.n_shards = ex.n_shards
             acct.shard_db_bytes += (ex.view.db_bytes_uploaded
-                                    + ex.view.q_bytes_uploaded - db0)
+                                    + ex.view.q_bytes_uploaded
+                                    + ex.view.pq_bytes_uploaded - db0)
             acct.shard_mask_bytes += ex.mask_bytes_uploaded - m0
 
         return self._dsq_batch_planned(queries, paths, k, recursive, exclude,
@@ -459,7 +523,7 @@ class DirectoryVectorDB:
             req = [(i, si, g.precision) for si, g in enumerate(live)
                    for i in g.request_idx]
             for val in sorted({npr[i] for i, _, _ in req}):
-                for prec in ("fp32", "int8"):
+                for prec in ("fp32", "int8", "pq"):
                     rows = np.asarray([i for i, _, p in req
                                        if npr[i] == val and p == prec])
                     if rows.size == 0:
@@ -474,8 +538,8 @@ class DirectoryVectorDB:
                     out_scores[rows] = s
                     out_ids[rows] = i
                     acct.launches += 1
-                    if prec == "int8":
-                        # the int8 phase is capped at the probed window
+                    if prec in ("int8", "pq"):
+                        # the approx phase is capped at the probed window
                         window = val * ex.layout().max_aligned
                         acct.rescore_candidates += len(rows) * min(
                             resolve_rescore_k(k, rescore_k, len(self.store)),
@@ -509,7 +573,7 @@ class DirectoryVectorDB:
                 out_scores[rows] = s
                 out_ids[rows] = i
                 acct.launches += 1
-                if g.precision == "int8":
+                if g.precision in ("int8", "pq"):
                     # the quantized beam collects max(ef, window) per query
                     acct.rescore_candidates += len(rows) * max(
                         ef_search,

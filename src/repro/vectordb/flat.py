@@ -156,6 +156,56 @@ def _gather_topk_i8(q_i8: jnp.ndarray, q_scale: jnp.ndarray,
     return jax.lax.top_k(scores, k)
 
 
+def _adc_scores(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """(B, n) PQ/ADC scores — THE shared scoring primitive of every PQ jnp
+    twin (flat scan/gather, IVF tile scoring via its gathered variant, the
+    sharded local scan), mirroring ``int_exact_dot``'s role for int8. One
+    256-lane ``take`` per subspace accumulated into (B, n), so no (B, n, M)
+    intermediate ever materializes — the shape XLA:CPU executes fastest (the
+    Pallas kernel fuses the same gather in VMEM). Metric-free: the LUT
+    folds it in (see quant.PQCodebook.lut)."""
+    c = codes.astype(jnp.int32)
+    scores = jnp.take(lut[:, 0, :], c[:, 0], axis=1)
+    for m in range(1, codes.shape[1]):
+        scores = scores + jnp.take(lut[:, m, :], c[:, m], axis=1)
+    return scores
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _scan_topk_pq(lut: jnp.ndarray, codes: jnp.ndarray, words: jnp.ndarray,
+                  k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp twin of the Pallas ``scoped_topk_pq`` kernel: ADC scan of the
+    uint8 code store through the per-query LUT, packed word mask."""
+    from ..kernels.ref import unpack_words_ref
+    n = codes.shape[0]
+    scores = _adc_scores(lut, codes)
+    mask = unpack_words_ref(words, n)
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _multi_scan_topk_pq(lut: jnp.ndarray, codes: jnp.ndarray,
+                        mask_words: jnp.ndarray, scope_ids: jnp.ndarray,
+                        k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp twin of the Pallas ``multi_scope_topk_pq`` kernel (heterogeneous
+    scope batch over the PQ code store)."""
+    from ..kernels.ref import unpack_words_ref
+    n = codes.shape[0]
+    scores = _adc_scores(lut, codes)
+    masks = unpack_words_ref(mask_words, n)
+    valid = jnp.take(masks, scope_ids, axis=0)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _gather_topk_pq(lut: jnp.ndarray, cand_codes: jnp.ndarray,
+                    k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ADC phase of the gather plan: score only the |C| candidate codes."""
+    return jax.lax.top_k(_adc_scores(lut, cand_codes), k)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
 def _rescore_topk(queries: jnp.ndarray, cand_rows: jnp.ndarray,
                   valid: jnp.ndarray,
@@ -182,6 +232,16 @@ def gather_rescore(store: VectorStore, queries: np.ndarray,
     cand_ids = np.asarray(cand_ids, dtype=np.int64)
     # block-padding rows surfaced by stray mask tail bits are not real rows
     cand_ids = np.where(cand_ids < len(store), cand_ids, -1)
+    if store.tiered_active():
+        # tiered store: exact rows live in host RAM; every valid candidate
+        # outside the device-pinned hot set is a host->device fetch
+        fetch = cand_ids >= 0
+        pm = store.pinned_mask()
+        if pm is not None:
+            fetch = fetch & ~pm[np.maximum(cand_ids, 0)]
+        n_fetch = int(np.count_nonzero(fetch))
+        store.rescore_fetch_rows += n_fetch
+        store.rescore_fetch_bytes += n_fetch * store.dim * 4
     rows = store.vectors[np.maximum(cand_ids, 0)]            # (B, R, d)
     kk = min(k, cand_ids.shape[1])
     vals, loc = _rescore_topk(jnp.asarray(queries), jnp.asarray(rows),
@@ -255,6 +315,11 @@ class FlatExecutor:
             # precision for it (the same rule BatchPlanner applies per group)
             if not (plan == "gather" and m <= r):
                 return self._search_int8(queries, k, candidate_ids, plan, r)
+        if precision == "pq":
+            r = resolve_rescore_k(k, rescore_k, m)
+            # same window rule as int8: tiny gathers stay exact fp32
+            if not (plan == "gather" and m <= r):
+                return self._search_pq(queries, k, candidate_ids, plan, r)
         kk = min(k, m)
         if plan == "gather":
             cand_rows = self.store.vectors[candidate_ids]
@@ -300,6 +365,27 @@ class FlatExecutor:
             cand[~np.isfinite(np.asarray(vals))] = -1
         return gather_rescore(self.store, queries, cand, k)
 
+    def _search_pq(self, queries: np.ndarray, k: int,
+                   candidate_ids: np.ndarray, plan: str, r: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Two-phase PQ path of :meth:`search`: ADC scan/gather over the
+        uint8 codes selects ``r`` candidates, exact fp32 rescore ranks k."""
+        n = len(self.store)
+        lut = jnp.asarray(self.store.pq_lut(queries))
+        if plan == "gather":
+            cand_codes = self.store.pq_codes[candidate_ids]
+            _, local = _gather_topk_pq(lut, jnp.asarray(cand_codes), r)
+            cand = np.asarray(candidate_ids, np.int64)[np.asarray(local)]
+        else:
+            words = pack_ids_to_words(candidate_ids, n)
+            vals, cand = _scan_topk_pq(lut, self.store.device_pq_codes(),
+                                       jnp.asarray(words), min(r, n))
+            cand = np.asarray(cand, dtype=np.int64)
+            # exhausted (-inf) lanes carry arbitrary top_k column ids — out
+            # of scope, keep them away from the rescore
+            cand[~np.isfinite(np.asarray(vals))] = -1
+        return gather_rescore(self.store, queries, cand, k)
+
     def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
                      scope_ids: np.ndarray, k: int,
                      use_pallas: bool = False, precision: str = "fp32",
@@ -320,6 +406,9 @@ class FlatExecutor:
         if precision == "int8":
             return self._search_multi_int8(queries, mask_words, scope_ids,
                                            k, use_pallas, rescore_k)
+        if precision == "pq":
+            return self._search_multi_pq(queries, mask_words, scope_ids,
+                                         k, use_pallas, rescore_k)
         if use_pallas:
             scores, ids = kops.multi_scope_topk(
                 queries, self.store.device_vectors(), mask_words,
@@ -361,5 +450,25 @@ class FlatExecutor:
         cand = np.asarray(cand, dtype=np.int64)
         # exhausted (-inf) lanes carry arbitrary top_k column ids (the fused
         # kernel already yields -1); mask them out of the rescore
+        cand[~np.isfinite(np.asarray(vals))] = -1
+        return gather_rescore(self.store, queries, cand, k)
+
+    def _search_multi_pq(self, queries, mask_words, scope_ids, k,
+                         use_pallas, rescore_k
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        from ..kernels import ops as kops
+        n = len(self.store)
+        r = resolve_rescore_k(k, rescore_k, n)
+        lut = self.store.pq_lut(queries)
+        if use_pallas:
+            vals, cand = kops.multi_scope_topk_pq(
+                lut, self.store.device_pq_codes(), mask_words, scope_ids,
+                k=r)
+        else:
+            vals, cand = _multi_scan_topk_pq(
+                jnp.asarray(lut), self.store.device_pq_codes(),
+                jnp.asarray(mask_words, dtype=jnp.uint32),
+                jnp.asarray(scope_ids, dtype=jnp.int32), r)
+        cand = np.asarray(cand, dtype=np.int64)
         cand[~np.isfinite(np.asarray(vals))] = -1
         return gather_rescore(self.store, queries, cand, k)

@@ -65,6 +65,17 @@ class PGIndex:
             return -s
         return self.store.q_sq_norms()[ids] - 2.0 * s
 
+    def _distances_pq(self, lut_q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """PQ/ADC traversal distances: sum each visited row's LUT entries
+        (M byte-indexed lookups instead of a dim-wide fp32 dot). The LUT
+        already folds the metric (see ``PQCodebook.lut``) into a
+        larger-is-better score, so negate for the beam's smaller-is-closer
+        ordering."""
+        codes = self.store.pq_codes[ids]                    # (n, M)
+        m = codes.shape[1]
+        s = lut_q[np.arange(m)[None, :], codes.astype(np.int64)].sum(axis=1)
+        return -s
+
     def _build(self) -> None:
         n = len(self.store)
         self._n_nodes = n
@@ -251,6 +262,19 @@ class PGIndex:
             for qi in range(nq):
                 dist_fn = functools.partial(self._distances_i8, q_i8f[qi],
                                             float(q_s[qi]))
+                ids, _ = self._beam(queries[qi], self._entry, r,
+                                    valid_mask=valid_mask, k=k,
+                                    dist_fn=dist_fn)
+                ids = ids[:r]
+                cand[qi, : len(ids)] = ids
+            return gather_rescore(self.store, queries, cand, k)
+        if precision == "pq":
+            from .flat import gather_rescore
+            r = max(ef_search, resolve_rescore_k(k, rescore_k, n))
+            lut = self.store.pq_lut(queries)                # (nq, M, 256)
+            cand = np.full((nq, r), -1, dtype=np.int64)
+            for qi in range(nq):
+                dist_fn = functools.partial(self._distances_pq, lut[qi])
                 ids, _ = self._beam(queries[qi], self._entry, r,
                                     valid_mask=valid_mask, k=k,
                                     dist_fn=dist_fn)

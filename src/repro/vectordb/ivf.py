@@ -166,6 +166,37 @@ def _ivf_batch_i8(queries, q_i8, q_scale, centers, offsets, aligned,
     return vals, ids
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "nprobe", "max_aligned"))
+def _ivf_batch_pq(queries, lut, centers, offsets, aligned, flat_ids,
+                  pq_codes, words, sids, k: int, nprobe: int,
+                  max_aligned: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """PQ/ADC phase of the two-phase batched IVF launch: probe (always fp32,
+    same partition sets as every other precision), gather the *uint8 PQ
+    codes* of the probed tiles (M bytes per candidate instead of 4*dim),
+    sum each candidate's LUT entries, scope-mask, top-``k`` (= rescore_k)
+    candidate ids for the caller's exact fp32 gather-rescore. Metric-free:
+    the per-query LUT folds it in."""
+    n = pq_codes.shape[0]
+    cand = _probe_and_expand(queries, centers, offsets, aligned, flat_ids,
+                             nprobe, max_aligned)         # (B, C), n=invalid
+    valid = cand < n
+    safe = jnp.where(valid, cand, 0)
+    codes = jnp.take(pq_codes, safe, axis=0)              # (B, C, M) uint8
+    sel = jnp.take_along_axis(
+        lut, codes.transpose(0, 2, 1).astype(jnp.int32), axis=2)  # (B, M, C)
+    scores = jnp.sum(sel, axis=1)                         # (B, C)
+    qwords = jnp.take(words, sids, axis=0)                # (B, n_words)
+    qbits = jnp.take_along_axis(qwords, safe >> 5, axis=1)
+    bit = (qbits >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    mask = valid & (bit != 0)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    vals, loc = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(cand, loc, axis=1)
+    ids = jnp.where(jnp.isfinite(vals), ids, -1)
+    return vals, ids
+
+
 @functools.partial(jax.jit, static_argnames=("nprobe", "max_aligned"))
 def _ivf_expand_gather(queries, centers, offsets, aligned, flat_ids, data,
                        words, sids, nprobe: int, max_aligned: int):
@@ -332,6 +363,17 @@ class IVFIndex:
                 self.store.device_q_vectors(), self.store.device_q_scales(),
                 q_sq, words_d, sids_d, k=r, nprobe=nprobe,
                 max_aligned=lay.max_aligned, metric=self.store.metric)
+            return gather_rescore(self.store, queries,
+                                  np.asarray(cand, dtype=np.int64), k)
+        if precision == "pq":
+            from .flat import gather_rescore
+            r = min(resolve_rescore_k(k, rescore_k, n), C)
+            lut = jnp.asarray(self.store.pq_lut(queries))
+            _, cand = _ivf_batch_pq(
+                jnp.asarray(queries), lut, self._centers_dev,
+                lay.offsets, lay.aligned, lay.flat_ids,
+                self.store.device_pq_codes(), words_d, sids_d, k=r,
+                nprobe=nprobe, max_aligned=lay.max_aligned)
             return gather_rescore(self.store, queries,
                                   np.asarray(cand, dtype=np.int64), k)
         kk = min(k, C)

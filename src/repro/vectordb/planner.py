@@ -295,9 +295,16 @@ class BatchAccounting:
     # of each precision's device store and how many candidates the int8
     # phase handed to the exact fp32 rescore
     precision_groups: Dict[str, int] = field(default_factory=dict)
-    db_bytes_fp32: int = 0           # fp32 device store bytes
+    db_bytes_fp32: int = 0           # fp32 device store bytes (alive rows)
     db_bytes_int8: int = 0           # int8 codes + per-row scale bytes
-    rescore_candidates: int = 0      # total int8-phase survivors rescored
+    db_bytes_pq: int = 0             # PQ uint8 code bytes (alive rows)
+    rescore_candidates: int = 0      # total approx-phase survivors rescored
+    # tiered-storage terms (zero unless a device byte budget is configured):
+    # fp32 bytes the exact rescore pulled host->device this batch, and where
+    # the store's alive rows currently live
+    rescore_fetch_bytes: int = 0     # host->device fp32 row fetch traffic
+    rows_device_pinned: int = 0      # alive rows pinned device-resident
+    rows_host: int = 0               # alive rows resident in host RAM only
 
 
 def device_popcount(words: np.ndarray) -> int:
@@ -316,6 +323,10 @@ class BatchPlanner:
                  cache: Optional[ScopeMaskCache] = None):
         self.gather_threshold = gather_threshold
         self.cache = cache if cache is not None else ScopeMaskCache()
+        # cumulative per-scope request counts across every planned batch —
+        # the DSQ access statistics the tiered store's hot-directory pinning
+        # reads (hot scopes keep their fp32 rows device-resident)
+        self.scope_access: Dict[ScopeKey, int] = {}
 
     def choose_plan(self, scope_size: int, n: int, k: int) -> str:
         """Same decision rule as the per-request FlatExecutor path (required
@@ -339,6 +350,8 @@ class BatchPlanner:
         order: Dict[ScopeKey, List[int]] = {}
         for i, spec in enumerate(specs):
             order.setdefault(ScopeKey.from_spec(spec), []).append(i)
+        for key, idxs in order.items():
+            self.scope_access[key] = self.scope_access.get(key, 0) + len(idxs)
         acct.batch_size += len(specs)
         acct.unique_scopes += len(order)
 
@@ -369,10 +382,10 @@ class BatchPlanner:
             size = ent.scope_size
             plan = self.choose_plan(size, n, k)
             prec = "fp32"
-            if precision == "int8" and plan != "empty":
+            if precision in ("int8", "pq") and plan != "empty":
                 r = resolve_rescore_k(k, rescore_k, size)
                 if plan == "scan" or size > r:
-                    prec = "int8"
+                    prec = precision
             groups.append(PlanGroup(
                 key=key, request_idx=idxs, scope_size=size, plan=plan,
                 entry=ent, cache_hit=key not in misses, precision=prec))

@@ -61,6 +61,134 @@ def resolve_rescore_k(k: int, rescore_k: Optional[int], n: int) -> int:
     return max(1, min(max(r, k), n)) if n > 0 else max(k, 1)
 
 
+# -------------------------------------------------------------------- PQ/ADC
+#
+# Product quantization: split each row into M contiguous subvectors of
+# dsub = dim / M components, k-means each subspace into 256 centroids, store
+# one uint8 centroid index per subspace. A row costs M bytes instead of
+# 4 * dim — 1/16 at the default dsub = 4 — which is what finally lets the
+# device tier hold a corpus whose fp32 rows exceed the device byte budget.
+#
+# Scoring is asymmetric distance computation (ADC): the query is NOT
+# quantized. Per query we build one (M, 256) lookup table of subvector
+# scores against every centroid, and a row's approximate score is the sum
+# of M table entries selected by its codes. The LUT folds the metric in so
+# the scan itself is metric-free:
+#
+#   ip / cos :  lut[m, c] = q_m . C[m, c]          => sum = q . x_hat
+#   l2       :  lut[m, c] = 2 q_m . C[m, c] - |C[m, c]|^2
+#                                           => sum = 2 q . x_hat - |x_hat|^2
+#
+# matching the fp32 scan's "larger is better" l2 identity (2 q.x - |x|^2),
+# so every executor ranks ADC scores the same way it ranks exact ones. As
+# with int8, the ADC phase only *selects* rescore_k candidates; the exact
+# fp32 gather-rescore ranks the final top-k.
+
+PQ_N_CENTROIDS = 256
+PQ_TRAIN_SAMPLE = 4096
+PQ_TRAIN_ITERS = 10
+
+
+def default_pq_m(dim: int) -> int:
+    """Default subspace count: the largest divisor of ``dim`` that is at
+    most ``dim // 4`` (dsub >= 4 => codes are <= 1/16 of fp32 bytes)."""
+    target = max(1, dim // 4)
+    for m in range(target, 0, -1):
+        if dim % m == 0:
+            return m
+    return 1
+
+
+class PQCodebook:
+    """Per-subspace k-means codebook with frozen-after-training encode.
+
+    The codebook trains ONCE on an ingest sample (deterministic given
+    ``seed``), then incrementally encodes every later row with the frozen
+    centroids — the same watermark pattern the int8 mirror uses — so codes
+    for already-ingested rows never change under DSM or further ingest.
+    """
+
+    def __init__(self, dim: int, m: Optional[int] = None, seed: int = 0):
+        m = default_pq_m(dim) if m is None else int(m)
+        if m <= 0 or dim % m != 0:
+            raise ValueError(f"pq m {m} must divide dim {dim}")
+        self.dim = dim
+        self.m = m
+        self.dsub = dim // m
+        self.seed = seed
+        self.centroids: Optional[np.ndarray] = None  # (m, 256, dsub) f32
+
+    @property
+    def trained(self) -> bool:
+        return self.centroids is not None
+
+    def train(self, rows: np.ndarray) -> None:
+        """Lloyd k-means per subspace on (a sample of) ``rows``; empty
+        clusters keep their previous centroid (the IVF trainer's rule)."""
+        rows = np.atleast_2d(np.asarray(rows, dtype=np.float32))
+        rng = np.random.default_rng(self.seed)
+        n = len(rows)
+        if n > PQ_TRAIN_SAMPLE:
+            rows = rows[rng.choice(n, size=PQ_TRAIN_SAMPLE, replace=False)]
+            n = PQ_TRAIN_SAMPLE
+        k = PQ_N_CENTROIDS
+        cents = np.empty((self.m, k, self.dsub), np.float32)
+        for m in range(self.m):
+            sub = rows[:, m * self.dsub:(m + 1) * self.dsub]
+            init = rng.choice(n, size=k, replace=n < k)
+            c = sub[init].copy()
+            for _ in range(PQ_TRAIN_ITERS):
+                assign = self._assign(sub, c)
+                counts = np.bincount(assign, minlength=k).astype(np.float32)
+                sums = np.zeros_like(c)
+                np.add.at(sums, assign, sub)
+                nonempty = counts > 0
+                c[nonempty] = sums[nonempty] / counts[nonempty, None]
+            cents[m] = c
+        self.centroids = cents
+
+    @staticmethod
+    def _assign(sub: np.ndarray, cents: np.ndarray) -> np.ndarray:
+        # argmin |x - c|^2 == argmin |c|^2 - 2 x.c  (drop the |x|^2 term)
+        d2 = (cents * cents).sum(axis=1)[None, :] - 2.0 * (sub @ cents.T)
+        return np.argmin(d2, axis=1)
+
+    def encode(self, rows: np.ndarray) -> np.ndarray:
+        """Nearest-centroid codes, ``(n, M) uint8``."""
+        rows = np.atleast_2d(np.asarray(rows, dtype=np.float32))
+        out = np.empty((len(rows), self.m), np.uint8)
+        for m in range(self.m):
+            sub = rows[:, m * self.dsub:(m + 1) * self.dsub]
+            out[:, m] = self._assign(sub, self.centroids[m]).astype(np.uint8)
+        return out
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        """Reconstruct ``(n, dim)`` fp32 rows from codes."""
+        codes = np.atleast_2d(np.asarray(codes))
+        parts = [self.centroids[m][codes[:, m].astype(np.intp)]
+                 for m in range(self.m)]
+        return np.concatenate(parts, axis=1)
+
+    def lut(self, queries: np.ndarray, metric: str) -> np.ndarray:
+        """Per-query ADC tables, ``(nq, M, 256) float32`` (metric folded
+        in — see the module docstring identity)."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        sub_q = queries.reshape(len(queries), self.m, self.dsub)
+        dots = np.einsum("qmd,mcd->qmc", sub_q, self.centroids,
+                         dtype=np.float32)
+        if metric == "l2":
+            cent_sq = (self.centroids * self.centroids).sum(axis=2)
+            return (2.0 * dots - cent_sq[None]).astype(np.float32)
+        return dots.astype(np.float32)
+
+    def nbytes(self) -> int:
+        """Codebook bytes (O(1) model state, reported separately from the
+        per-row code bytes)."""
+        if self.centroids is None:
+            return 0
+        return int(self.centroids.nbytes)
+
+
 def int_exact_dot(a_i8, b_i8, dnums=(((1,), (1,)), ((), ())),
                   contract_dim: Optional[int] = None):
     """Dot of int8 code tensors as fp32 — THE shared scoring primitive of

@@ -85,6 +85,7 @@ class ShardedExecutor:
         self._table = None                               # device (S, W)
         self._fns: Dict[Tuple[int, int], object] = {}    # (cap, k) -> jit fn
         self._fns_i8: Dict[Tuple[int, int], object] = {}  # (cap, r) -> jit fn
+        self._fns_pq: Dict[Tuple[int, int], object] = {}  # (cap, r) -> jit fn
         self._lock = threading.Lock()        # serving vs DSM delta threads
         # lifetime accounting (the per-batch deltas land in BatchAccounting)
         self.mask_bytes_uploaded = 0
@@ -113,6 +114,8 @@ class ShardedExecutor:
                 self._fns = {key: fn for key, fn in self._fns.items()
                              if key[0] == cap}
                 self._fns_i8 = {key: fn for key, fn in self._fns_i8.items()
+                                if key[0] == cap}
+                self._fns_pq = {key: fn for key, fn in self._fns_pq.items()
                                 if key[0] == cap}
 
     def reserve(self, n_scopes: int) -> None:
@@ -155,6 +158,16 @@ class ShardedExecutor:
                                               self.store.dim, r,
                                               self.store.metric)
             self._fns_i8[key] = fn
+        return fn
+
+    def _fn_pq(self, r: int):
+        key = (self.view.cap, r)
+        fn = self._fns_pq.get(key)
+        if fn is None:
+            from ..distributed.search import make_sharded_batch_search_pq
+            fn = make_sharded_batch_search_pq(self.mesh, self.view.cap,
+                                              self.store.pq_codebook.m, r)
+            self._fns_pq[key] = fn
         return fn
 
     # ----------------------------------------------------------- scope table
@@ -261,7 +274,7 @@ class ShardedExecutor:
                     rescore_k: Optional[int] = None) -> int:
         """Per-shard top-k depth the scan launch must support: ``k`` for the
         exact fp32 scan, the effective ``rescore_k`` for the int8 phase."""
-        if precision == "int8":
+        if precision in ("int8", "pq"):
             return resolve_rescore_k(k, rescore_k, len(self.store))
         return k
 
@@ -289,6 +302,10 @@ class ShardedExecutor:
             r = self.phase_depth(k, precision, rescore_k)
             cand = self._launch_i8(queries, self._table, slot_ids, r)
             return gather_rescore(self.store, queries, cand, k)
+        if precision == "pq":
+            r = self.phase_depth(k, precision, rescore_k)
+            cand = self._launch_pq(queries, self._table, slot_ids, r)
+            return gather_rescore(self.store, queries, cand, k)
         scores, ids = self._launch(queries, self._table, slot_ids, k)
         ids[~np.isfinite(scores)] = -1
         return scores, ids
@@ -310,6 +327,23 @@ class ShardedExecutor:
         s, i = fn(qdb, qscale, table, self.view.alive_device(),
                   jnp.asarray(np.asarray(sids, dtype=np.int32)),
                   jnp.asarray(q_i8), jnp.asarray(q_s))
+        self.launches += 1
+        cand = np.asarray(i, dtype=np.int64)
+        cand[~np.isfinite(np.asarray(s))] = -1
+        return cand
+
+    def _launch_pq(self, queries, table, sids, r) -> np.ndarray:
+        """PQ/ADC scan phase on the mesh: the per-query LUTs build on the
+        host (one (B, M, 256) einsum against the frozen codebook), each
+        shard sums its slice of the sharded uint8 code mirror, and the
+        shard-merge replicates the global (B, r) candidate ids (-1 where a
+        scope ran dry). The caller's single gather-rescore is the only
+        host-fetch of fp32 rows on this path — the tiered-storage window."""
+        lut = self.store.pq_lut(queries)
+        fn = self._fn_pq(r)
+        s, i = fn(self.view.pq_device(), table, self.view.alive_device(),
+                  jnp.asarray(np.asarray(sids, dtype=np.int32)),
+                  jnp.asarray(lut))
         self.launches += 1
         cand = np.asarray(i, dtype=np.int64)
         cand[~np.isfinite(np.asarray(s))] = -1
@@ -358,6 +392,11 @@ class ShardedExecutor:
         if precision == "int8":
             r = self.phase_depth(kk, precision, rescore_k)
             cand = self._launch_i8(queries, jnp.asarray(words[None, :]),
+                                   np.zeros(queries.shape[0], np.int32), r)
+            return gather_rescore(self.store, queries, cand, k)
+        if precision == "pq":
+            r = self.phase_depth(kk, precision, rescore_k)
+            cand = self._launch_pq(queries, jnp.asarray(words[None, :]),
                                    np.zeros(queries.shape[0], np.int32), r)
             return gather_rescore(self.store, queries, cand, k)
         scores, ids = self._launch(queries, jnp.asarray(words[None, :]),

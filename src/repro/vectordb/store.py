@@ -19,7 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .quant import quantize_rows
+from .quant import PQCodebook, quantize_rows
 
 METRICS = ("ip", "l2", "cos")
 
@@ -76,7 +76,8 @@ def pack_ids_to_words(candidate_ids: Optional[np.ndarray],
 
 
 class VectorStore:
-    def __init__(self, dim: int, metric: str = "ip", capacity: int = 1024):
+    def __init__(self, dim: int, metric: str = "ip", capacity: int = 1024,
+                 pq_m: Optional[int] = None):
         if metric not in METRICS:
             raise ValueError(f"metric {metric!r} not in {METRICS}")
         self.dim = dim
@@ -102,6 +103,26 @@ class VectorStore:
         self._device_q_scale: Optional[jnp.ndarray] = None
         self._q_norms_cache: Optional[np.ndarray] = None
         self._device_q_norms: Optional[jnp.ndarray] = None
+        # PQ/ADC tier: one uint8 code per subspace against a codebook that
+        # trains once on the rows present at first use and is then frozen
+        # (see quant.PQCodebook), so codes for already-ingested rows never
+        # change. Maintained through the same lazy watermark as the int8
+        # mirror: rows [0, _pq_n) are encoded, accessors catch up first.
+        self._pq_m = pq_m
+        self._pq: Optional[PQCodebook] = None
+        self._pq_codes: Optional[np.ndarray] = None
+        self._pq_n = 0
+        self._device_pq: Optional[jnp.ndarray] = None
+        # Tiered storage: when a device byte budget is configured and the
+        # fp32 rows outgrow it, fp32 rows demote to host RAM — only the PQ
+        # codes (plus any hot-pinned fp32 rows) stay device-resident, and
+        # the exact rows are fetched per batch for the gather_rescore
+        # window. The fetch counters are cumulative; per-batch accounting
+        # snapshots the delta.
+        self._device_budget: Optional[int] = None
+        self._pinned: Optional[np.ndarray] = None
+        self.rescore_fetch_bytes = 0
+        self.rescore_fetch_rows = 0
         # Tombstones: rows are append-only, so a delete marks the id dead
         # here and every executor consults the alive mask at query time
         # (scoped searches drop deleted ids via the directory layer already;
@@ -273,12 +294,119 @@ class VectorStore:
             self._device_q_norms = jnp.asarray(self.q_sq_norms())
         return self._device_q_norms
 
+    # ------------------------------------------------------------ PQ tier
+    def _ensure_pq(self) -> None:
+        """Catch the PQ mirror up to the current row count: trains the
+        codebook once (on the rows present at first use), then encodes only
+        the fresh ``[_pq_n, _n)`` slice with the frozen centroids."""
+        if self._pq is None:
+            self._pq = PQCodebook(self.dim, self._pq_m)
+        cap = self._rows.shape[0]
+        if self._pq_codes is None or self._pq_codes.shape[0] < cap:
+            grown = np.zeros((cap, self._pq.m), dtype=np.uint8)
+            if self._pq_codes is not None:
+                grown[: self._pq_n] = self._pq_codes[: self._pq_n]
+            self._pq_codes = grown
+        if self._pq_n < self._n:
+            if not self._pq.trained:
+                self._pq.train(self._rows[: self._n])
+            self._pq_codes[self._pq_n: self._n] = self._pq.encode(
+                self._rows[self._pq_n: self._n])
+            self._pq_n = self._n
+
+    @property
+    def pq_codebook(self) -> PQCodebook:
+        self._ensure_pq()
+        return self._pq
+
+    @property
+    def pq_codes(self) -> np.ndarray:
+        """(n, M) uint8 PQ codes (see :class:`.quant.PQCodebook`)."""
+        self._ensure_pq()
+        return self._pq_codes[: self._n]
+
+    def pq_lut(self, queries: np.ndarray) -> np.ndarray:
+        """(nq, M, 256) fp32 per-query ADC tables for this store's metric."""
+        return self.pq_codebook.lut(queries, self.metric)
+
+    def device_pq_codes(self) -> jnp.ndarray:
+        if self._device_pq is None or self._device_pq.shape[0] != self._n:
+            self._device_pq = jnp.asarray(self.pq_codes)
+        return self._device_pq
+
+    # ------------------------------------------------------ tiered storage
+    def set_device_budget(self, nbytes: Optional[int]) -> None:
+        """Configure the device byte budget. Once the fp32 rows outgrow it,
+        the store is *tiered*: fp32 rows live in host RAM, the device holds
+        PQ codes (plus hot-pinned fp32 rows), and rescore windows fetch
+        host rows on demand."""
+        self._device_budget = None if nbytes is None else int(nbytes)
+
+    @property
+    def device_budget(self) -> Optional[int]:
+        return self._device_budget
+
+    def tiered_active(self) -> bool:
+        return (self._device_budget is not None
+                and self.nbytes() > self._device_budget)
+
+    def pin_rows(self, ids) -> None:
+        """Replace the set of device-pinned fp32 rows (scope-aware hot
+        placement, chosen by the planner's access stats)."""
+        mask = np.zeros(self._rows.shape[0], dtype=bool)
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < self._n)]
+        mask[ids] = True
+        self._pinned = mask
+
+    def pinned_mask(self) -> Optional[np.ndarray]:
+        """(n,) bool mask of device-pinned rows, or None when nothing is
+        pinned."""
+        if self._pinned is None:
+            return None
+        return self._pinned[: self._n]
+
+    def placement(self) -> Tuple[int, int]:
+        """``(rows_device_pinned, rows_host)`` for alive rows. When the
+        store is not tiered every row is device-resident (the fp32 device
+        cache), so host count is 0."""
+        alive = self.alive_count()
+        if not self.tiered_active():
+            return alive, 0
+        if self._pinned is None:
+            return 0, alive
+        pinned = int(np.count_nonzero(
+            self._pinned[: self._n] & ~self._deleted[: self._n]))
+        return pinned, alive - pinned
+
+    # -------------------------------------------------------------- bytes
+    def alive_count(self) -> int:
+        return self._n - self._n_deleted
+
     def nbytes(self) -> int:
         return self._n * self.dim * 4
 
     def q_nbytes(self) -> int:
         """Device bytes of the int8 tier: codes + one fp32 scale per row."""
         return self._n * self.dim + self._n * 4
+
+    def alive_nbytes(self) -> int:
+        """fp32 bytes of rows that are actually alive — what accounting
+        reports, so tombstoned rows can't flatter compression ratios."""
+        return self.alive_count() * self.dim * 4
+
+    def q_alive_nbytes(self) -> int:
+        return self.alive_count() * (self.dim + 4)
+
+    def pq_nbytes(self) -> int:
+        """Device bytes of the PQ tier: uint8 codes of alive rows only.
+        The O(1) codebook is reported separately
+        (:meth:`pq_codebook_nbytes`), not amortized into per-row bytes."""
+        self._ensure_pq()
+        return self.alive_count() * self._pq.m
+
+    def pq_codebook_nbytes(self) -> int:
+        return self._pq.nbytes() if self._pq is not None else 0
 
 
 class ShardedStoreView:
@@ -315,9 +443,13 @@ class ShardedStoreView:
         self._qdb = None                 # (cap, dim) int8, row-sharded
         self._qscale = None              # (cap,) f32, row-sharded
         self._q_synced = 0
+        # PQ tier mirror (uint8 codes), same lazy/incremental policy
+        self._pqdb = None                # (cap, M) uint8, row-sharded
+        self._pq_synced = 0
         self.db_bytes_uploaded = 0       # incremental row-scatter traffic
         self.alive_bytes_uploaded = 0    # alive-mask scatter traffic
         self.q_bytes_uploaded = 0        # int8 mirror scatter traffic
+        self.pq_bytes_uploaded = 0       # PQ mirror scatter traffic
         self.reshards = 0                # full capacity re-shards
 
     @property
@@ -359,6 +491,7 @@ class ShardedStoreView:
             self.reshards += 1
             self._alive = None
             self._qdb = None        # int8 mirror rebuilds at the new capacity
+            self._pqdb = None       # PQ mirror likewise
             return True
         if n > self._synced:
             n_new = n - self._synced
@@ -405,6 +538,33 @@ class ShardedStoreView:
             self.q_bytes_uploaded += n_new * (self.store.dim + 4)
             self._q_synced = n
         return self._qdb, self._qscale
+
+    def pq_device(self) -> jnp.ndarray:
+        """Row-sharded PQ code mirror ``(cap, M) uint8``. Same lazy build /
+        incremental power-of-two-padded scatter / re-shard-rebuild policy
+        as :meth:`q_device`. Capacity-padding rows are code 0 — whatever
+        they score, the packed alive mask zeroes them out. Call
+        :meth:`sync` first."""
+        assert self._db is not None, "call sync() before pq_device()"
+        n = len(self.store)
+        m = self.store.pq_codebook.m
+        if self._pqdb is None:
+            host = np.zeros((self._cap, m), dtype=np.uint8)
+            host[:n] = self.store.pq_codes
+            self._pqdb = jax.device_put(host,
+                                        self._sharding(self.axes, None))
+            self.pq_bytes_uploaded += host.nbytes
+            self._pq_synced = n
+        elif n > self._pq_synced:
+            n_new = n - self._pq_synced
+            pad = _pow2_at_most(n_new, self._cap - self._pq_synced)
+            chunk = np.zeros((pad, m), dtype=np.uint8)
+            chunk[:n_new] = self.store.pq_codes[self._pq_synced: n]
+            self._pqdb = _scatter_rows(self._pqdb, jnp.asarray(chunk),
+                                       jnp.int32(self._pq_synced))
+            self.pq_bytes_uploaded += n_new * m
+            self._pq_synced = n
+        return self._pqdb
 
     def _patch_alive_range(self, w_lo: int, w_hi: int) -> None:
         """Recompute words [w_lo, w_hi) from authoritative store state and

@@ -373,6 +373,88 @@ class FuzzState:
                         rtol=1e-5, atol=1e-5,
                         err_msg=f"int8/{strat}/{name}/{i}")
 
+    def check_dsq_pq(self) -> None:
+        """PQ executor rows, same contract as :meth:`check_dsq_int8`: with
+        exhaustive ``rescore_k`` the exact fp32 rescore ranks every PQ-phase
+        survivor, so flat/sharded must reproduce the oracle's top-k set
+        (k-boundary ties tolerated), ivf-pq must match its own fp32 top-k
+        set, and all returned scores are true fp32 scores of in-scope ids.
+        Running after the fuzz's DSM/ingest ops also exercises the frozen
+        codebook's incremental encode consistency."""
+        q = self.rng.normal(size=DIM).astype(np.float32)
+        path, rec, exc = self.random_scope()
+        scope = self.oracle.resolve(path, rec, exc)
+        want = self.oracle.topk(q, scope, K)
+        k_max = max(len(self.oracle.vectors), 1)
+        for strat, db in self.dbs.items():
+            for name, params in (("flat", {}), ("sharded", {}),
+                                 ("ivf", {"nprobe": NPROBE}),
+                                 ("pg", {"ef_search": EF})):
+                res = db.dsq(q, path, k=K, recursive=rec, exclude=exc,
+                             executor=name, precision="pq",
+                             rescore_k=k_max, **params)
+                ids = [int(i) for i in res.ids[0] if int(i) >= 0]
+                scores = [float(s) for s, i in
+                          zip(res.scores[0], res.ids[0]) if int(i) >= 0]
+                assert res.scope_size == len(scope), (strat, name)
+                assert set(ids) <= scope, (strat, name, set(ids) - scope)
+                osc = self.oracle.scores(q, ids)
+                for i, s in zip(ids, scores):
+                    assert abs(osc[i] - s) < 1e-4 * max(1.0, abs(s)), \
+                        (strat, name, i, s, osc[i])
+                if name in ("flat", "sharded"):
+                    want_ids = {i for i, _ in want}
+                    for miss in want_ids - set(ids):
+                        tie = min(scores) if scores else -np.inf
+                        assert abs(dict(want)[miss] - tie) < 1e-4, \
+                            (strat, name, miss, dict(want)[miss], tie)
+                if name == "ivf":
+                    rf = db.dsq(q, path, k=K, recursive=rec, exclude=exc,
+                                executor="ivf", **params)
+                    f_ids = {int(i) for i in rf.ids[0] if int(i) >= 0}
+                    f_sc = {int(i): float(s) for s, i in
+                            zip(rf.scores[0], rf.ids[0]) if int(i) >= 0}
+                    for miss in f_ids - set(ids):
+                        tie = min(scores) if scores else -np.inf
+                        assert abs(f_sc[miss] - tie) < 1e-4, \
+                            (strat, miss, f_sc[miss], tie)
+
+    def check_dsq_batch_pq(self) -> None:
+        """pq batch == pq loop per executor (PG excepted: the quantized beam
+        traversal is entry-dependent, so scope membership only)."""
+        B = 6
+        qs = self.rng.normal(size=(B, DIM)).astype(np.float32)
+        specs = [self.random_scope() for _ in range(B)]
+        paths = [s[0] for s in specs]
+        rec = [s[1] for s in specs]
+        exc = [s[2] for s in specs]
+        k_max = max(len(self.oracle.vectors), 1)
+        for strat, db in self.dbs.items():
+            for name, params in (("flat", {}), ("sharded", {}),
+                                 ("ivf", {"nprobe": NPROBE}),
+                                 ("pg", {"ef_search": EF})):
+                batch = db.dsq_batch(qs, paths, k=K, recursive=rec,
+                                     exclude=exc, executor=name,
+                                     precision="pq", rescore_k=k_max,
+                                     **params)
+                for i, res in enumerate(batch):
+                    loop = db.dsq(qs[i], paths[i], k=K, recursive=rec[i],
+                                  exclude=exc[i], executor=name,
+                                  precision="pq", rescore_k=k_max,
+                                  **params)
+                    got = {int(x) for x in res.ids[0] if int(x) >= 0}
+                    ref = {int(x) for x in loop.ids[0] if int(x) >= 0}
+                    if name == "pg":
+                        scope = self.oracle.resolve(paths[i], rec[i], exc[i])
+                        assert got <= scope, (strat, i, got - scope)
+                        continue
+                    assert got == ref, (strat, name, i, got, ref)
+                    np.testing.assert_allclose(
+                        np.sort(res.scores[0][np.isfinite(res.scores[0])]),
+                        np.sort(loop.scores[0][np.isfinite(loop.scores[0])]),
+                        rtol=1e-5, atol=1e-5,
+                        err_msg=f"pq/{strat}/{name}/{i}")
+
     def check_dsq_batch(self) -> None:
         B = 6
         qs = self.rng.normal(size=(B, DIM)).astype(np.float32)
@@ -444,6 +526,8 @@ def _run_fuzz(state: FuzzState, n_ops: int, check_every: int = 6) -> None:
     state.check_dsq_batch()
     state.check_dsq_int8()
     state.check_dsq_batch_int8()
+    state.check_dsq_pq()
+    state.check_dsq_batch_pq()
     state.op_crash_recover()
 
 

@@ -79,3 +79,12 @@ def test_recall_per_strategy(ds_name, strategy):
     assert _recall(ds, gt, db, "ivf", nprobe=7, precision="int8") >= 0.95
     assert _recall(ds, gt, db, "pg", ef_search=128,
                    precision="int8") >= 0.95
+
+    # pq two-phase (uint8 ADC scan/gather -> exact fp32 rescore): coarser
+    # codes than int8, so the floors are the issue's gates — >= 0.95 for
+    # the exact executors through the default rescore window, >= 0.90 for
+    # the approximate ones
+    assert _recall(ds, gt, db, "flat", precision="pq") >= 0.95
+    assert _recall(ds, gt, db, "sharded", precision="pq") >= 0.95
+    assert _recall(ds, gt, db, "ivf", nprobe=7, precision="pq") >= 0.90
+    assert _recall(ds, gt, db, "pg", ef_search=128, precision="pq") >= 0.90
