@@ -111,7 +111,7 @@ class ContextDatabase:
                 stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
                 stats["db_bytes_pq"] = res.batch.db_bytes_pq
                 stats["rescore_candidates"] = res.batch.rescore_candidates
-            if res.batch is not None and res.batch.rows_host:
+            if res.batch is not None and res.batch.tiered:
                 # tiered placement: where the fp32 rows live and what the
                 # exact rescore actually pulled host->device this batch
                 stats["rescore_fetch_bytes"] = res.batch.rescore_fetch_bytes

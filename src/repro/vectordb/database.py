@@ -66,6 +66,10 @@ class DirectoryVectorDB:
         self._planners: Dict[str, BatchPlanner] = {}
         self._journal_path = journal_path
         self._sharded_subs: Dict[str, object] = {}   # ns -> delta listener
+        # ns -> {scope key -> last resolved candidate ids}: the candidate
+        # pool the tiered hot-pin ranking draws from, so scopes absent from
+        # the current batch keep competing for the pin budget
+        self._hot_scope_ids: Dict[str, Dict[object, np.ndarray]] = {}
         self.namespace(DEFAULT_NS)  # default filesystem namespace
 
     # -------------------------------------------------------------- plumbing
@@ -368,7 +372,8 @@ class DirectoryVectorDB:
             acct.db_bytes_fp32 = self.store.alive_nbytes()
             acct.db_bytes_pq = self.store.pq_nbytes()
         acct.rescore_fetch_bytes = self.store.rescore_fetch_bytes - fetch0
-        if self.store.tiered_active():
+        acct.tiered = self.store.tiered_active()
+        if acct.tiered:
             self._update_hot_pins(namespace, groups)
         acct.rows_device_pinned, acct.rows_host = self.store.placement()
 
@@ -394,23 +399,27 @@ class DirectoryVectorDB:
         rows device-resident. Heat is the planner's cumulative per-scope DSQ
         request count (the access statistics it already collects); the pin
         budget is whatever device capacity the PQ codes leave free. Runs
-        after every planned batch over that batch's resolved scopes, so the
-        pinned set tracks the live access distribution — a cold batch never
-        unpins rows hotter scopes claimed earlier, because heat is
-        cumulative and monotone."""
+        after every planned batch: the batch's resolved scopes refresh the
+        per-namespace candidate pool, and the ranking runs over *every*
+        scope seen so far — so a cold batch never unpins rows hotter scopes
+        claimed earlier, because those scopes stay in the pool with their
+        cumulative (monotone) heat."""
         store = self.store
         budget_rows = (store.device_budget - store.pq_nbytes()
                        - store.pq_codebook_nbytes()) // (store.dim * 4)
         if budget_rows <= 0:
             store.pin_rows(np.empty(0, np.int64))
             return
+        hot = self._hot_scope_ids.setdefault(namespace, {})
+        for g in groups:
+            if g.plan != "empty":
+                hot[g.key] = np.asarray(g.candidate_ids, np.int64)
         heat = self.planner(namespace).scope_access
-        ranked = sorted((g for g in groups if g.plan != "empty"),
-                        key=lambda g: heat.get(g.key, 0), reverse=True)
+        ranked = sorted(hot.items(), key=lambda kv: heat.get(kv[0], 0),
+                        reverse=True)
         pinned: List[np.ndarray] = []
         total = 0
-        for g in ranked:
-            ids = np.asarray(g.candidate_ids, np.int64)
+        for _, ids in ranked:
             room = budget_rows - total
             if room <= 0:
                 break

@@ -302,6 +302,7 @@ class BatchAccounting:
     # tiered-storage terms (zero unless a device byte budget is configured):
     # fp32 bytes the exact rescore pulled host->device this batch, and where
     # the store's alive rows currently live
+    tiered: bool = False             # store over its device byte budget
     rescore_fetch_bytes: int = 0     # host->device fp32 row fetch traffic
     rows_device_pinned: int = 0      # alive rows pinned device-resident
     rows_host: int = 0               # alive rows resident in host RAM only

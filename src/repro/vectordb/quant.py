@@ -122,6 +122,13 @@ class PQCodebook:
     def trained(self) -> bool:
         return self.centroids is not None
 
+    def _require_trained(self) -> None:
+        if self.centroids is None:
+            raise ValueError(
+                "PQ codebook not trained: the codebook trains on the rows "
+                "present at first use, so precision='pq' (and pq_lut/encode/"
+                "decode) needs a non-empty store first")
+
     def train(self, rows: np.ndarray) -> None:
         """Lloyd k-means per subspace on (a sample of) ``rows``; empty
         clusters keep their previous centroid (the IVF trainer's rule)."""
@@ -155,6 +162,7 @@ class PQCodebook:
 
     def encode(self, rows: np.ndarray) -> np.ndarray:
         """Nearest-centroid codes, ``(n, M) uint8``."""
+        self._require_trained()
         rows = np.atleast_2d(np.asarray(rows, dtype=np.float32))
         out = np.empty((len(rows), self.m), np.uint8)
         for m in range(self.m):
@@ -164,6 +172,7 @@ class PQCodebook:
 
     def decode(self, codes: np.ndarray) -> np.ndarray:
         """Reconstruct ``(n, dim)`` fp32 rows from codes."""
+        self._require_trained()
         codes = np.atleast_2d(np.asarray(codes))
         parts = [self.centroids[m][codes[:, m].astype(np.intp)]
                  for m in range(self.m)]
@@ -172,6 +181,7 @@ class PQCodebook:
     def lut(self, queries: np.ndarray, metric: str) -> np.ndarray:
         """Per-query ADC tables, ``(nq, M, 256) float32`` (metric folded
         in — see the module docstring identity)."""
+        self._require_trained()
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         sub_q = queries.reshape(len(queries), self.m, self.dsub)
         dots = np.einsum("qmd,mcd->qmc", sub_q, self.centroids,

@@ -361,9 +361,15 @@ class VectorStore:
 
     def pinned_mask(self) -> Optional[np.ndarray]:
         """(n,) bool mask of device-pinned rows, or None when nothing is
-        pinned."""
+        pinned. Ingest after a pin may grow the store past the mask built at
+        pin time — new rows are unpinned until the next pin refresh, so the
+        mask is padded with False up to the current row count."""
         if self._pinned is None:
             return None
+        if self._pinned.shape[0] < self._n:
+            grown = np.zeros(self._rows.shape[0], dtype=bool)
+            grown[: self._pinned.shape[0]] = self._pinned
+            self._pinned = grown
         return self._pinned[: self._n]
 
     def placement(self) -> Tuple[int, int]:
@@ -373,10 +379,10 @@ class VectorStore:
         alive = self.alive_count()
         if not self.tiered_active():
             return alive, 0
-        if self._pinned is None:
+        pm = self.pinned_mask()
+        if pm is None:
             return 0, alive
-        pinned = int(np.count_nonzero(
-            self._pinned[: self._n] & ~self._deleted[: self._n]))
+        pinned = int(np.count_nonzero(pm & ~self._deleted[: self._n]))
         return pinned, alive - pinned
 
     # -------------------------------------------------------------- bytes

@@ -342,6 +342,71 @@ def test_tiered_hot_pinning_reduces_fetch():
     assert a2.rescore_fetch_bytes < a1.rescore_fetch_bytes
 
 
+def test_store_pin_mask_survives_growth():
+    """Regression: pin_rows sized the pinned mask to the buffer capacity at
+    pin time, so ingest growth left a stale short mask — placement() raised
+    a broadcast ValueError and rescore indexing raised IndexError."""
+    store = VectorStore(dim=8, capacity=16)
+    store.add(RNG.normal(size=(16, 8)).astype(np.float32))
+    store.set_device_budget(1)
+    store.pin_rows(np.arange(4))
+    store.add(RNG.normal(size=(40, 8)).astype(np.float32))   # grows buffer
+    dev, host = store.placement()                    # was: ValueError
+    assert (dev, host) == (4, 52)
+    pm = store.pinned_mask()
+    assert pm.shape == (56,)
+    assert bool(pm[55]) is False                     # was: IndexError
+    assert pm[:4].all() and not pm[4:].any()
+
+
+def test_tiered_survives_ingest_after_pin():
+    """Pins taken before an ingest must not crash the next tiered batch —
+    the DSM-era serving loop interleaves ingest with tiered DSQ."""
+    db = _tiered_db(n=1500, n_dirs=4)
+    db.store.set_device_budget(db.store.nbytes() // 3)
+    q = RNG.normal(size=(4, DIM)).astype(np.float32)
+    paths = [f"/d/{i % 4}/" for i in range(4)]
+    db.dsq_batch(q, paths, k=5)                      # takes pins at n=1500
+    assert db.store.pinned_mask().any()
+    db.ingest(RNG.normal(size=(1200, DIM)).astype(np.float32),
+              [f"/d/{i % 4}/" for i in range(1200)])  # grows past capacity
+    pm = db.store.pinned_mask()
+    assert pm.shape == (2700,) and not pm[1500:].any()   # new rows unpinned
+    dev, host = db.store.placement()                 # no broadcast ValueError
+    assert dev + host == 2700
+    res = db.dsq_batch(q, paths, k=5)                # no IndexError in rescore
+    acct = res[0].batch
+    assert acct.rows_device_pinned + acct.rows_host == 2700
+
+
+def test_tiered_cold_batch_keeps_hot_pins():
+    """A batch over cold scopes must not unpin rows hotter scopes claimed in
+    earlier batches (the cumulative-heat pin contract)."""
+    db = _tiered_db(n=2000, n_dirs=8)
+    db.store.set_device_budget(db.store.nbytes() // 3)
+    q = RNG.normal(size=(8, DIM)).astype(np.float32)
+    hot = ["/d/0/"] * 8
+    for _ in range(3):                               # make /d/0/ clearly hot
+        db.dsq_batch(q, hot, k=5)
+    hot_pins = db.store.pinned_mask().copy()
+    hot_ids = set(db.namespaces["fs"].resolve("/d/0/").to_array())
+    assert hot_ids & set(np.flatnonzero(hot_pins))
+    db.dsq_batch(q[:1], ["/d/7/"], k=5)              # one cold request
+    still = set(np.flatnonzero(db.store.pinned_mask()))
+    assert set(np.flatnonzero(hot_pins)) & hot_ids <= still
+
+
+def test_pq_on_empty_store_raises_clear_error():
+    store = VectorStore(dim=DIM)
+    with pytest.raises(ValueError, match="not trained"):
+        store.pq_lut(RNG.normal(size=(1, DIM)).astype(np.float32))
+    cb = PQCodebook(DIM)
+    with pytest.raises(ValueError, match="not trained"):
+        cb.encode(RNG.normal(size=(2, DIM)).astype(np.float32))
+    with pytest.raises(ValueError, match="not trained"):
+        cb.decode(np.zeros((2, cb.m), np.uint8))
+
+
 def test_tiered_results_match_explicit_pq():
     """The auto-upgraded plan is exactly the explicit precision="pq" plan."""
     db = _tiered_db()
@@ -373,6 +438,27 @@ def test_serving_surfaces_pq_and_tiered_stats():
                                "/docs/", RAGConfig(k=5))
     assert len(hits) == 5
     assert stats["rows_host"] > 0
+    assert "rescore_fetch_bytes" in stats
+
+
+def test_serving_tiered_stats_survive_full_pin_coverage():
+    """Tiered stats are gated on tiered state, not on rows_host being
+    nonzero — when the pin budget covers every alive row (rows_host == 0)
+    the placement/fetch stats must still surface."""
+    from repro.serving.rag import ContextDatabase, RAGConfig
+    ctx = ContextDatabase(dim=DIM)
+    eids = [ctx.add_context(RNG.normal(size=DIM).astype(np.float32),
+                            f"/docs/{i % 3}/", "L0", np.arange(4) + i)
+            for i in range(300)]
+    ctx.build("flat")
+    for eid in eids[20:]:          # tombstones: 20 alive rows, 300 buffered
+        ctx.db.delete(eid)
+    ctx.db.store.set_device_budget(ctx.db.store.nbytes() - 1)
+    hits, stats = ctx.retrieve(RNG.normal(size=DIM).astype(np.float32),
+                               "/docs/", RAGConfig(k=5))
+    assert len(hits) == 5
+    assert stats["rows_host"] == 0                   # everything fit pinned
+    assert stats["rows_device_pinned"] == 20
     assert "rescore_fetch_bytes" in stats
 
 
