@@ -1,12 +1,16 @@
-"""Serving launcher: batched directory-scoped RAG against a small LM.
+"""Serving launcher: open-loop directory-scoped RAG under continuous batching.
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 16 --batch 4
+    PYTHONPATH=src python -m repro.launch.serve --requests 32 --qps 8
 
-Continuous-batching-style loop: requests are grouped into batches, each batch
-runs scope-resolution (TrieHI) -> scoped top-k -> tiered context assembly ->
-prefill + greedy decode. Between batches the namespace may be maintained
-(DSM) without taking the server down — the region-lock manager serializes
-overlapping mutations against in-flight resolution.
+Requests arrive on a seeded Poisson process at ``--qps`` and are submitted
+asynchronously to the :class:`RAGServer` scheduler, which coalesces them into
+device batches under the latency SLO (flush at ``--batch`` requests or when
+the oldest request has waited ``--slo-ms``). Each request carries its own
+prompt tokens. Latency is measured from the *scheduled* arrival time, so a
+slow service cannot suppress the arrivals that would have exposed it
+(coordinated-omission-safe). Between batches the namespace may be maintained
+(DSM) without taking the server down — staged scope masks are epoch-validated
+against racing mutations.
 """
 from __future__ import annotations
 
@@ -21,22 +25,31 @@ from ..configs import smoke_config
 from ..datasets import make_wiki_dir
 from ..models import model_schema
 from ..models.layers import init_params
+from ..serving import AdmissionError, SchedulerConfig, open_loop_arrivals
 from ..serving.rag import ContextDatabase, RAGConfig, RAGServer
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--qps", type=float, default=4.0,
+                    help="target offered load (Poisson arrival rate)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="scheduler max batch size")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="max wait before a partial batch is flushed")
+    ap.add_argument("--queue-capacity", type=int, default=256)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--contexts", type=int, default=600)
     ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--seed", type=int, default=5)
     ap.add_argument("--scope-strategy", default="triehi",
                     choices=["triehi", "pe_online", "pe_offline"])
     args = ap.parse_args()
 
     dim = 64
-    ds = make_wiki_dir(scale=0.003, dim=dim, n_queries=args.requests, seed=5)
+    ds = make_wiki_dir(scale=0.003, dim=dim, n_queries=args.requests,
+                       seed=args.seed)
     ctx = ContextDatabase(dim=dim, scope_strategy=args.scope_strategy)
     rng = np.random.default_rng(0)
     for i in range(min(args.contexts, ds.n_entries)):
@@ -50,26 +63,51 @@ def main():
     server = RAGServer(ctx, params, cfg,
                        RAGConfig(k=6, token_budget=96, escalate_top=2))
 
-    served = 0
-    lat = []
-    while served < args.requests:
-        n = min(args.batch, args.requests - served)
-        idx = slice(served, served + n)
-        scopes = [a or "/" for a in ds.query_anchors[idx]]
-        t0 = time.perf_counter()
-        out = server.answer(ds.queries[idx], scopes,
-                            prompts=[np.arange(4, dtype=np.int32)],
-                            max_new_tokens=args.new_tokens)
-        dt = time.perf_counter() - t0
-        lat.append(dt / n)
-        served += n
-        print(f"batch of {n}: {dt*1e3:.0f} ms total "
-              f"(retrieve {out['retrieve_s']*1e3:.0f} ms, "
-              f"decode {out['decode_s']*1e3:.0f} ms), "
-              f"mean scope={np.mean([s['scope_size'] for s in out['retrieval_stats']]):.0f}")
-    print(f"served {served} requests, "
-          f"mean per-request latency {np.mean(lat)*1e3:.0f} ms "
-          f"(p95 {np.percentile(lat, 95)*1e3:.0f} ms)")
+    scopes = [a or "/" for a in ds.query_anchors[:args.requests]]
+    # Each simulated request gets its own prompt (varying length and content)
+    # so per-request prompt handling is exercised end to end.
+    prompts = [rng.integers(0, 250, size=int(rng.integers(2, 12)))
+               for _ in range(args.requests)]
+
+    # One synchronous warmup batch so JIT compilation does not land inside
+    # the measured window.
+    n_warm = min(2, args.requests)
+    server.answer(ds.queries[:n_warm], scopes[:n_warm],
+                  prompts=prompts[:n_warm], max_new_tokens=args.new_tokens)
+
+    server.start(SchedulerConfig(max_batch=args.batch,
+                                 max_wait_ms=args.slo_ms,
+                                 queue_capacity=args.queue_capacity),
+                 max_new_tokens=args.new_tokens)
+    offsets = open_loop_arrivals(args.qps, args.requests, seed=args.seed)
+    t0 = time.perf_counter()
+    tickets, shed = [], 0
+    for i in range(args.requests):
+        now = time.perf_counter() - t0
+        if offsets[i] > now:
+            time.sleep(offsets[i] - now)
+        try:
+            tickets.append(server.submit(
+                ds.queries[i], scopes[i], prompt=prompts[i],
+                t_arrival=t0 + offsets[i]))
+        except AdmissionError:
+            shed += 1
+    results = [t.result(timeout=120.0) for t in tickets]
+    stats = server.serving_stats()
+    server.stop()
+
+    lat = sorted(t.latency_s for t in tickets)
+    scope_sizes = [r["retrieval_stats"]["scope_size"] for r in results]
+    print(f"served {len(results)}/{args.requests} requests "
+          f"(shed {shed}) at offered {args.qps:.1f} qps, "
+          f"achieved {stats['qps']:.1f} qps")
+    print(f"latency from scheduled arrival: "
+          f"p50 {stats['p50_ms']:.0f} ms  p95 {stats['p95_ms']:.0f} ms  "
+          f"p99 {stats['p99_ms']:.0f} ms  max {lat[-1]*1e3:.0f} ms")
+    print(f"batches {stats['batches']} "
+          f"(mean occupancy {stats['occupancy']:.2f}, "
+          f"mean queue wait {stats['queue_mean_ms']:.0f} ms), "
+          f"mean scope={np.mean(scope_sizes):.0f}")
 
 
 if __name__ == "__main__":

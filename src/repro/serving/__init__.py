@@ -1,3 +1,9 @@
-from .rag import ContextDatabase, RAGConfig, RAGServer
+from .rag import ContextDatabase, RAGConfig, RAGServer, RetrievalTicket
+from .scheduler import (AdmissionError, ContinuousScheduler, ScheduledDSQ,
+                        SchedulerConfig, ServingMetrics, ServingTicket,
+                        open_loop_arrivals)
 
-__all__ = ["ContextDatabase", "RAGConfig", "RAGServer"]
+__all__ = ["ContextDatabase", "RAGConfig", "RAGServer", "RetrievalTicket",
+           "AdmissionError", "ContinuousScheduler", "ScheduledDSQ",
+           "SchedulerConfig", "ServingMetrics", "ServingTicket",
+           "open_loop_arrivals"]

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from ..vectordb import DirectoryVectorDB
+from .scheduler import (ContinuousScheduler, ScheduledDSQ, SchedulerConfig,
+                        ServingTicket, assemble_dsq, stage_dsq)
 
 TIERS = ("L0", "L1", "L2")
 
@@ -54,6 +56,7 @@ class ContextDatabase:
     def __init__(self, dim: int, scope_strategy: str = "triehi"):
         self.db = DirectoryVectorDB(dim=dim, scope_strategy=scope_strategy)
         self.payloads: Dict[int, ContextEntry] = {}
+        self._serving: Optional[ScheduledDSQ] = None
 
     def add_context(self, vector: np.ndarray, path: str, tier: str,
                     text_tokens: np.ndarray) -> int:
@@ -93,32 +96,46 @@ class ContextDatabase:
                                     exclude=exclude, executor=cfg.executor,
                                     precision=cfg.precision,
                                     rescore_k=cfg.rescore_k)
-        out = []
-        for res in results:
-            hits = [self.payloads[int(i)] for i in res.ids[0] if int(i) >= 0]
-            stats = {"directory_us": res.directory_ns / 1e3,
-                     "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size,
-                     "plan": res.plan, "scope_shared": res.scope_shared}
-            if res.batch is not None and res.batch.n_shards:
-                stats["n_shards"] = res.batch.n_shards
-                stats["shard_mask_bytes"] = res.batch.shard_mask_bytes
-                stats["collective_bytes"] = res.batch.collective_bytes
-            if res.batch is not None and res.batch.db_bytes_int8:
-                stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
-                stats["db_bytes_int8"] = res.batch.db_bytes_int8
-                stats["rescore_candidates"] = res.batch.rescore_candidates
-            if res.batch is not None and res.batch.db_bytes_pq:
-                stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
-                stats["db_bytes_pq"] = res.batch.db_bytes_pq
-                stats["rescore_candidates"] = res.batch.rescore_candidates
-            if res.batch is not None and res.batch.tiered:
-                # tiered placement: where the fp32 rows live and what the
-                # exact rescore actually pulled host->device this batch
-                stats["rescore_fetch_bytes"] = res.batch.rescore_fetch_bytes
-                stats["rows_device_pinned"] = res.batch.rows_device_pinned
-                stats["rows_host"] = res.batch.rows_host
-            out.append((hits, stats))
-        return out
+        return [self._format_result(res) for res in results]
+
+    def _format_result(self, res) -> Tuple[List[ContextEntry],
+                                           Dict[str, float]]:
+        """(payload hits, stats dict) for one DSQResult — shared by the
+        direct ``retrieve_batch`` path and the scheduled async path, so a
+        scheduled request surfaces byte-for-byte the same stats plus the
+        scheduler's own terms."""
+        hits = [self.payloads[int(i)] for i in res.ids[0] if int(i) >= 0]
+        stats = {"directory_us": res.directory_ns / 1e3,
+                 "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size,
+                 "plan": res.plan, "scope_shared": res.scope_shared}
+        if res.batch is not None and res.batch.n_shards:
+            stats["n_shards"] = res.batch.n_shards
+            stats["shard_mask_bytes"] = res.batch.shard_mask_bytes
+            stats["collective_bytes"] = res.batch.collective_bytes
+        if res.batch is not None and res.batch.db_bytes_int8:
+            stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
+            stats["db_bytes_int8"] = res.batch.db_bytes_int8
+            stats["rescore_candidates"] = res.batch.rescore_candidates
+        if res.batch is not None and res.batch.db_bytes_pq:
+            stats["db_bytes_fp32"] = res.batch.db_bytes_fp32
+            stats["db_bytes_pq"] = res.batch.db_bytes_pq
+            stats["rescore_candidates"] = res.batch.rescore_candidates
+        if res.batch is not None and res.batch.tiered:
+            # tiered placement: where the fp32 rows live and what the
+            # exact rescore actually pulled host->device this batch
+            stats["rescore_fetch_bytes"] = res.batch.rescore_fetch_bytes
+            stats["rows_device_pinned"] = res.batch.rows_device_pinned
+            stats["rows_host"] = res.batch.rows_host
+        if res.batch is not None and res.batch.sched_batches:
+            # continuous-batching terms stamped by the scheduler: where this
+            # request's batch sat in the serving pipeline, and how full it was
+            b = res.batch
+            stats["sched_queue_ms"] = (b.sched_queue_ns
+                                       / max(b.batch_size, 1)) / 1e6
+            stats["sched_stage_ms"] = b.sched_stage_ns / 1e6
+            stats["sched_service_ms"] = b.sched_service_ns / 1e6
+            stats["sched_occupancy"] = b.sched_occupancy / b.sched_batches
+        return hits, stats
 
     def retrieve(self, query_vec: np.ndarray, scope: str, cfg: RAGConfig,
                  recursive: bool = True, exclude: Sequence[str] = ()
@@ -146,6 +163,74 @@ class ContextDatabase:
             return np.zeros(1, dtype=np.int32)
         return np.concatenate(parts).astype(np.int32)
 
+    # ------------------------------------------------- async serving surface
+    def start_serving(self, cfg: RAGConfig,
+                      sched: Optional[SchedulerConfig] = None
+                      ) -> "ScheduledDSQ":
+        """Start the continuous-batching retrieval front end: concurrent
+        :meth:`submit_retrieve` calls coalesce into scheduler-filled
+        ``dsq_batch`` launches under the SLO flush policy, with weighted-fair
+        admission and double-buffered mask/query staging. Results are
+        bit-identical to :meth:`retrieve_batch` over the same batch."""
+        if getattr(self, "_serving", None) is not None:
+            raise RuntimeError("serving already started")
+        self._serving = ScheduledDSQ(
+            self.db, k=cfg.k, executor=cfg.executor, precision=cfg.precision,
+            rescore_k=cfg.rescore_k, cfg=sched).start()
+        return self._serving
+
+    def submit_retrieve(self, query_vec: np.ndarray, scope: str,
+                        recursive: bool = True, exclude: Sequence[str] = (),
+                        tenant: str = "default",
+                        t_arrival: Optional[float] = None
+                        ) -> "RetrievalTicket":
+        """Async submit: admit one retrieval into the scheduler (raises
+        :class:`repro.serving.scheduler.AdmissionError` at queue capacity).
+        ``.result()`` awaits the scheduler-filled batch and returns the same
+        ``(hits, stats)`` pair :meth:`retrieve` would."""
+        if getattr(self, "_serving", None) is None:
+            raise RuntimeError("call start_serving(cfg) first")
+        ticket = self._serving.submit(query_vec, scope, recursive=recursive,
+                                      exclude=exclude, tenant=tenant,
+                                      t_arrival=t_arrival)
+        return RetrievalTicket(ticket, self._format_result)
+
+    def stop_serving(self) -> None:
+        if getattr(self, "_serving", None) is not None:
+            self._serving.stop()
+            self._serving = None
+
+    def serving_stats(self, reset: bool = False) -> Dict[str, object]:
+        """Window snapshot of the serving metrics: QPS, p50/p95/p99 latency,
+        batch occupancy, shed rate, merged batch accounting.
+        ``reset=True`` starts the next measurement window."""
+        if getattr(self, "_serving", None) is None:
+            raise RuntimeError("serving not started")
+        return self._serving.metrics.snapshot(reset=reset)
+
+
+class RetrievalTicket:
+    """Await handle whose ``result()`` maps the scheduled DSQResult to the
+    ``(hits, stats)`` pair of the synchronous retrieve path."""
+
+    def __init__(self, ticket: ServingTicket, fmt):
+        self._ticket = ticket
+        self._fmt = fmt
+
+    def done(self) -> bool:
+        return self._ticket.done()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._fmt(self._ticket.result(timeout))
+
+    @property
+    def latency_s(self) -> float:
+        return self._ticket.latency_s
+
+    @property
+    def batch_size(self) -> int:
+        return self._ticket.batch_size
+
 
 class RAGServer:
     """Batched scoped-retrieval + greedy decode."""
@@ -160,6 +245,8 @@ class RAGServer:
         self.mesh = mesh
         self._prefill = prefill
         self._decode = decode_step
+        self._sched: Optional[ContinuousScheduler] = None
+        self._serving_new_tokens = 16
 
     def answer(self, query_vecs: np.ndarray, scopes: Sequence[str],
                prompts: Sequence[np.ndarray], max_new_tokens: int = 16,
@@ -179,7 +266,19 @@ class RAGServer:
             contexts.append(self.assemble_with_prompt(hits, prompt))
             retrieval_stats.append(stats)
         t1 = time.perf_counter()
-        # pad to a rectangle for the batched LM
+        tokens = self._decode_batch(contexts, max_new_tokens)
+        t2 = time.perf_counter()
+        return {
+            "tokens": tokens,
+            "retrieval_stats": retrieval_stats,
+            "retrieve_s": t1 - t0,
+            "decode_s": t2 - t1,
+        }
+
+    def _decode_batch(self, contexts: List[np.ndarray],
+                      max_new_tokens: int) -> np.ndarray:
+        """Greedy decode over one coalesced context batch — shared by the
+        synchronous :meth:`answer` and the scheduler's execute callback."""
         max_len = max(len(c) for c in contexts)
         B = len(contexts)
         toks = np.zeros((B, max_len), dtype=np.int32)
@@ -195,13 +294,64 @@ class RAGServer:
             logits, cache = self._decode(self.params, cache, cur, self.lm_cfg,
                                          self.mesh)
             cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        t2 = time.perf_counter()
-        return {
-            "tokens": np.stack(out_tokens, axis=1),
-            "retrieval_stats": retrieval_stats,
-            "retrieve_s": t1 - t0,
-            "decode_s": t2 - t1,
-        }
+        return np.stack(out_tokens, axis=1)
+
+    # ------------------------------------------------- async serving surface
+    def start(self, sched: Optional[SchedulerConfig] = None,
+              max_new_tokens: int = 16) -> "RAGServer":
+        """Start the continuous-batching answer front end: concurrent
+        :meth:`submit` calls coalesce into scheduler-filled batches that run
+        the full retrieve -> assemble -> prefill -> decode pipeline. The
+        retrieval staging (scope masks + query upload) double-buffers
+        against the previous batch's ranking and decode."""
+        if getattr(self, "_sched", None) is not None:
+            raise RuntimeError("server already started")
+        self._serving_new_tokens = max_new_tokens
+        self._sched = ContinuousScheduler(
+            self._serve_batch, stage=self._stage_batch, cfg=sched).start()
+        return self
+
+    def submit(self, query_vec: np.ndarray, scope: str,
+               prompt: Sequence[int] = (), recursive: bool = True,
+               tenant: str = "default",
+               t_arrival: Optional[float] = None) -> ServingTicket:
+        """Admit one answer request (typed :class:`AdmissionError` at queue
+        capacity). ``.result()`` returns ``{"tokens", "hits",
+        "retrieval_stats"}`` for this request, produced by a
+        scheduler-filled batch."""
+        if getattr(self, "_sched", None) is None:
+            raise RuntimeError("call start() first")
+        payload = (np.asarray(query_vec, np.float32), scope, bool(recursive),
+                   (), np.asarray(prompt, np.int32))
+        return self._sched.submit(payload, tenant=tenant, t_arrival=t_arrival)
+
+    def stop(self) -> None:
+        if getattr(self, "_sched", None) is not None:
+            self._sched.stop()
+            self._sched = None
+
+    def serving_stats(self, reset: bool = False) -> Dict[str, object]:
+        if getattr(self, "_sched", None) is None:
+            raise RuntimeError("server not started")
+        return self._sched.metrics.snapshot(reset=reset)
+
+    def _stage_batch(self, payloads) -> object:
+        return stage_dsq(self.ctx.db, payloads, self.cfg.k, "fs",
+                         self.cfg.executor)
+
+    def _serve_batch(self, payloads, staged) -> List[Dict[str, object]]:
+        """Execute one scheduler-coalesced answer batch: same pipeline as
+        :meth:`answer`, returning one result dict per request."""
+        queries, scopes, rec, _ = assemble_dsq(payloads)
+        prompts = [p[4] for p in payloads]
+        retrieved = self.ctx.retrieve_batch(queries, scopes, self.cfg,
+                                            recursive=rec)
+        contexts = [self.assemble_with_prompt(hits, prompt)
+                    for (hits, _), prompt in zip(retrieved, prompts)]
+        tokens = self._decode_batch(contexts, self._serving_new_tokens)
+        return [{"tokens": tokens[i], "hits": retrieved[i][0],
+                 "retrieval_stats": retrieved[i][1]}
+                for i in range(len(payloads))]
 
     @staticmethod
     def _prompt_for(prompts: Sequence[np.ndarray], i: int) -> np.ndarray:

@@ -21,6 +21,7 @@ scope is one launch over its candidate rows.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
@@ -306,6 +307,76 @@ class BatchAccounting:
     rescore_fetch_bytes: int = 0     # host->device fp32 row fetch traffic
     rows_device_pinned: int = 0      # alive rows pinned device-resident
     rows_host: int = 0               # alive rows resident in host RAM only
+    # continuous-batching scheduler terms (zero on direct dsq_batch calls):
+    # where this batch sat in the serving pipeline. Arrival is the earliest
+    # admission timestamp in the batch; queue is the summed admission-queue
+    # wait across its requests; stage is the (overlapped) host->device
+    # staging time; service is the executor wall-clock the scheduler saw.
+    sched_batches: int = 0           # scheduler-formed batches merged in
+    sched_arrival_ns: int = 0        # earliest request arrival (clock ns)
+    sched_queue_ns: int = 0          # summed admission-queue wait
+    sched_stage_ns: int = 0          # mask/query staging time (overlapped)
+    sched_service_ns: int = 0        # batch execute wall-clock
+    sched_occupancy: float = 0.0     # summed batch_size / max_batch
+    sched_shed: int = 0              # admissions rejected (backpressure)
+
+    def merge(self, other: "BatchAccounting") -> "BatchAccounting":
+        """Accumulate ``other`` into this accounting — the measurement-window
+        aggregation the serving layer uses (one cumulative ``BatchAccounting``
+        per window instead of re-creating the server to reset counters).
+        Counters sum; dict terms sum per key; byte/placement gauges take the
+        latest observation; ``tiered`` is sticky within the window."""
+        gauges = {"db_bytes_fp32", "db_bytes_int8", "db_bytes_pq",
+                  "rows_device_pinned", "rows_host", "n_shards"}
+        for f in dataclasses.fields(self):
+            ov = getattr(other, f.name)
+            if f.name in ("plan_groups", "precision_groups"):
+                mine = getattr(self, f.name)
+                for key, v in ov.items():
+                    mine[key] = mine.get(key, 0) + v
+            elif f.name == "resolve_stats":
+                for sf in dataclasses.fields(ov):
+                    sv, mv = getattr(ov, sf.name), getattr(self.resolve_stats,
+                                                           sf.name)
+                    if isinstance(mv, dict):
+                        for key, v in sv.items():
+                            mv[key] = mv.get(key, 0) + v
+                    else:
+                        setattr(self.resolve_stats, sf.name, mv + sv)
+            elif f.name == "tiered":
+                self.tiered = self.tiered or ov
+            elif f.name == "sched_arrival_ns":
+                if ov:
+                    self.sched_arrival_ns = (min(self.sched_arrival_ns, ov)
+                                             if self.sched_arrival_ns else ov)
+            elif f.name in gauges:
+                if ov:
+                    setattr(self, f.name, ov)
+            else:
+                setattr(self, f.name, getattr(self, f.name) + ov)
+        return self
+
+    def snapshot(self, reset: bool = False) -> Dict[str, object]:
+        """Plain-dict view of every counter (JSON-friendly: nested dataclasses
+        flatten). ``reset=True`` zeroes the accounting afterwards — the
+        per-measurement-window contract: a serving layer keeps one cumulative
+        instance, reads ``snapshot(reset=True)`` at each window edge, and QPS
+        and latency percentiles derive per window without re-creating the
+        server."""
+        out: Dict[str, object] = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "resolve_stats":
+                out[f.name] = dataclasses.asdict(v)
+            elif isinstance(v, dict):
+                out[f.name] = dict(v)
+            else:
+                out[f.name] = v
+        if reset:
+            fresh = BatchAccounting()
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, getattr(fresh, f.name))
+        return out
 
 
 def device_popcount(words: np.ndarray) -> int:
@@ -337,6 +408,45 @@ class BatchPlanner:
             return "empty"
         return choose_plan(scope_size, n, k, self.gather_threshold)
 
+    def resolve_scopes(self, index: ScopeIndex, n: int,
+                       keys: Sequence[ScopeKey],
+                       acct: Optional[BatchAccounting] = None
+                       ) -> Tuple[Dict[ScopeKey, CachedScope], set]:
+        """Cache-first resolution of a set of unique scope keys: hits are
+        served while their scope-epoch tokens validate, misses resolve in one
+        ``resolve_batch`` and are admitted under the capture-before-resolve
+        token snapshot (a DSM racing the resolution can never be cached
+        over). Shared by :meth:`plan` and the serving scheduler's staging
+        pass — staging batch N+1 through here warms the same epoch-validated
+        cache the execution-time plan reads, so a staged mask invalidated by
+        a racing DSM simply misses again at execute time instead of serving
+        a stale scope."""
+        resolved: Dict[ScopeKey, CachedScope] = {}
+        misses: List[Tuple[ScopeKey, Optional[Tuple]]] = []
+        for key in keys:
+            if key in resolved:
+                continue
+            ent = self.cache.lookup(index, key, n)
+            if ent is not None:
+                resolved[key] = ent
+                if acct is not None:
+                    acct.scope_cache_hits += 1
+            else:
+                # token snapshot BEFORE resolving: store() re-checks it so a
+                # DSM racing the resolution can never be cached over
+                misses.append((key, self.cache._tokens(index, key)))
+        if misses:
+            scopes = index.resolve_batch(
+                [key.path for key, _ in misses],
+                recursive=[key.recursive for key, _ in misses],
+                exclude=[key.exclude for key, _ in misses],
+                stats=(acct.resolve_stats if acct is not None
+                       else ResolveStats()))
+            for (key, toks), scope in zip(misses, scopes):
+                resolved[key] = self.cache.store(index, key, n, scope,
+                                                 tokens=toks)
+        return resolved, {key for key, _ in misses}
+
     def plan(self, index: ScopeIndex, n: int, specs: Sequence[ScopeSpec],
              k: int, acct: BatchAccounting, precision: str = "fp32",
              rescore_k: Optional[int] = None) -> List[PlanGroup]:
@@ -356,26 +466,8 @@ class BatchPlanner:
         acct.batch_size += len(specs)
         acct.unique_scopes += len(order)
 
-        resolved: Dict[ScopeKey, CachedScope] = {}
-        misses: List[Tuple[ScopeKey, Optional[Tuple]]] = []
-        for key in order:
-            ent = self.cache.lookup(index, key, n)
-            if ent is not None:
-                resolved[key] = ent
-                acct.scope_cache_hits += 1
-            else:
-                # token snapshot BEFORE resolving: store() re-checks it so a
-                # DSM racing the resolution can never be cached over
-                misses.append((key, self.cache._tokens(index, key)))
-        if misses:
-            scopes = index.resolve_batch(
-                [key.path for key, _ in misses],
-                recursive=[key.recursive for key, _ in misses],
-                exclude=[key.exclude for key, _ in misses],
-                stats=acct.resolve_stats)
-            for (key, toks), scope in zip(misses, scopes):
-                resolved[key] = self.cache.store(index, key, n, scope,
-                                                 tokens=toks)
+        resolved, misses = self.resolve_scopes(index, n, list(order),
+                                               acct=acct)
 
         groups: List[PlanGroup] = []
         for key, idxs in order.items():

@@ -1,0 +1,336 @@
+"""Continuous-batching serving front end (serving/scheduler.py).
+
+Contract under test: the scheduler is an *admission/occupancy* layer, never
+a semantic one — scheduler-coalesced results are bit-identical to a direct
+``dsq_batch`` of the same batch on every executor and precision, including
+immediately after a racing ``dsm_batch`` (staged masks epoch-invalidate
+rather than serve stale scopes). Around that: flush policy (size vs SLO
+deadline), weighted-fair admission under a flooding tenant, typed
+backpressure at queue capacity, seeded arrival-process determinism, and the
+serving metrics/accounting surface.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.datasets import make_wiki_dir
+from repro.serving import ContextDatabase, RAGConfig
+from repro.serving.scheduler import (AdmissionError, ContinuousScheduler,
+                                     ScheduledDSQ, SchedulerConfig,
+                                     open_loop_arrivals)
+from repro.vectordb import DirectoryVectorDB
+from repro.vectordb.planner import BatchAccounting
+
+EXECUTORS = ("flat", "ivf", "pg", "sharded")
+PRECISIONS = ("fp32", "int8", "pq")
+K = 8
+
+
+@pytest.fixture(scope="module")
+def wiki():
+    return make_wiki_dir(scale=0.002, dim=32, n_queries=24, seed=7)
+
+
+@pytest.fixture(scope="module")
+def db(wiki):
+    db = DirectoryVectorDB(dim=32, scope_strategy="triehi")
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    db.build_ann("ivf", n_lists=8)
+    db.build_ann("pg", max_degree=8, ef_construction=16)
+    db.build_ann("sharded")
+    return db
+
+
+def _requests(wiki, n):
+    paths = [(wiki.query_anchors[i % 6] or "/") for i in range(n)]
+    paths[0] = "/"
+    rec = [bool(wiki.query_recursive[i % 6]) for i in range(n)]
+    return wiki.queries[:n], paths, rec
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def _noop_sched(cfg, clock=None):
+    return ContinuousScheduler(lambda payloads, staged: list(payloads),
+                               cfg=cfg, clock=clock)
+
+
+# ------------------------------------------------------------ flush policy
+def test_flush_due_size_vs_deadline():
+    clk = _FakeClock()
+    s = _noop_sched(SchedulerConfig(max_batch=4, max_wait_ms=10.0), clock=clk)
+    assert s._flush_due() is None                      # nothing pending
+    for _ in range(3):
+        s.submit("p")
+    assert s._flush_due() is None                      # under size, under SLO
+    clk.t += 0.0099
+    assert s._flush_due() is None                      # 9.9 ms < 10 ms budget
+    clk.t += 0.0002
+    assert s._flush_due() == "deadline"                # oldest exhausted SLO
+    s.submit("p")
+    assert s._flush_due() == "size"                    # size wins at capacity
+    with s._cond:
+        batch = s._form_batch()
+    assert [r.seq for r in batch] == [0, 1, 2, 3]      # FIFO prefix
+    assert s._flush_due() is None
+
+
+def test_flush_reason_reaches_tickets():
+    s = _noop_sched(SchedulerConfig(max_batch=2, max_wait_ms=5.0))
+    with s:
+        t1 = s.submit("a")
+        t2 = s.submit("b")
+        assert t1.result(5.0) == "a" and t2.result(5.0) == "b"
+        assert t1.flush == "size" and t1.batch_size == 2
+        t3 = s.submit("c")                             # alone -> SLO flush
+        assert t3.result(5.0) == "c"
+    assert t3.flush in ("deadline", "drain")
+    assert t3.batch_size == 1
+
+
+# ----------------------------------------------------- weighted-fair admission
+def test_fairness_under_flooding_tenant():
+    s = _noop_sched(SchedulerConfig(max_batch=8, max_wait_ms=1e4,
+                                    queue_capacity=1000))
+    for _ in range(100):
+        s.submit("flood", tenant="a")                  # tenant a floods
+    for _ in range(4):
+        s.submit("fair", tenant="b")
+    with s._cond:
+        batch = s._form_batch()
+    counts = {t: sum(1 for r in batch if r.tenant == t) for t in ("a", "b")}
+    assert len(batch) == 8
+    assert counts["b"] == 4                            # equal-weight share
+    assert counts["a"] == 4
+
+
+def test_weighted_shares():
+    s = _noop_sched(SchedulerConfig(max_batch=8, max_wait_ms=1e4,
+                                    queue_capacity=1000,
+                                    tenant_weights={"a": 3.0, "b": 1.0}))
+    for _ in range(50):
+        s.submit("x", tenant="a")
+        s.submit("y", tenant="b")
+    with s._cond:
+        batch = s._form_batch()
+    counts = {t: sum(1 for r in batch if r.tenant == t) for t in ("a", "b")}
+    assert counts["a"] == 6 and counts["b"] == 2       # 3:1 of 8 slots
+
+
+def test_batch_sorted_by_admission_seq():
+    s = _noop_sched(SchedulerConfig(max_batch=6, max_wait_ms=1e4))
+    for i in range(3):
+        s.submit(i, tenant="a")
+        s.submit(i, tenant="b")
+    with s._cond:
+        batch = s._form_batch()
+    assert [r.seq for r in batch] == sorted(r.seq for r in batch)
+
+
+# ------------------------------------------------------------- backpressure
+def test_backpressure_typed_rejection():
+    s = _noop_sched(SchedulerConfig(max_batch=8, max_wait_ms=1e4,
+                                    queue_capacity=3))
+    for _ in range(3):
+        s.submit("ok", tenant="t")
+    with pytest.raises(AdmissionError) as ei:
+        s.submit("overflow", tenant="t")
+    assert ei.value.tenant == "t"
+    assert ei.value.queued == 3 and ei.value.capacity == 3
+    s.submit("other-tenant-unaffected", tenant="u")    # per-tenant bound
+    snap = s.metrics.snapshot()
+    assert snap["rejected"] == 1
+    assert snap["submitted"] == 4
+    assert snap["shed_rate"] == pytest.approx(1 / 5)
+
+
+# ----------------------------------------------------- arrival process
+def test_open_loop_arrivals_seeded_determinism():
+    a = open_loop_arrivals(50.0, 256, seed=3)
+    b = open_loop_arrivals(50.0, 256, seed=3)
+    c = open_loop_arrivals(50.0, 256, seed=4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0)                     # cumulative offsets
+    assert a[-1] / 256 == pytest.approx(1 / 50.0, rel=0.25)
+
+
+# ------------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_scheduled_bit_identical_to_direct(executor, db, wiki):
+    """pump() reproduces the exact coalesced batch, so ids AND score bits
+    must match the direct dsq_batch on every executor x precision."""
+    n = 12
+    queries, paths, rec = _requests(wiki, n)
+    for precision in PRECISIONS:
+        rescore = 4 * K if precision != "fp32" else None
+        direct = db.dsq_batch(queries, paths, k=K, recursive=rec,
+                              executor=executor, precision=precision,
+                              rescore_k=rescore)
+        sdsq = ScheduledDSQ(db, k=K, executor=executor, precision=precision,
+                            rescore_k=rescore,
+                            cfg=SchedulerConfig(max_batch=n, max_wait_ms=1e4))
+        tickets = [sdsq.submit(queries[i], paths[i], recursive=rec[i])
+                   for i in range(n)]
+        assert sdsq.pump() == n
+        for i, t in enumerate(tickets):
+            res = t.result(30.0)
+            np.testing.assert_array_equal(res.ids[0], direct[i].ids[0],
+                                          err_msg=f"{executor}/{precision}")
+            np.testing.assert_array_equal(res.scores[0], direct[i].scores[0],
+                                          err_msg=f"{executor}/{precision}")
+
+
+@pytest.mark.parametrize("executor", ["flat", "sharded"])
+def test_bit_identity_after_racing_dsm(executor, wiki):
+    """DSM lands between staging and execution: the staged masks were
+    resolved under pre-DSM epoch tokens, so execution must re-resolve (not
+    serve the stale scope) and match a fresh direct dsq_batch."""
+    db = DirectoryVectorDB(dim=32, scope_strategy="triehi")
+    db.ingest(wiki.vectors, wiki.entry_paths)
+    db.build_ann("flat")
+    db.build_ann("sharded")
+    n = 8
+    queries, paths, rec = _requests(wiki, n)
+    src = next(p for p in paths if p != "/")
+    sdsq = ScheduledDSQ(db, k=K, executor=executor,
+                        cfg=SchedulerConfig(max_batch=n, max_wait_ms=1e4))
+    sched = sdsq.scheduler
+    tickets = [sdsq.submit(queries[i], paths[i], recursive=rec[i])
+               for i in range(n)]
+    with sched._cond:
+        batch = sched._form_batch()
+    staged, stage_s = sched._do_stage(batch)           # pre-DSM masks staged
+    db.dsm_batch([("move", src, "/moved/")])           # racing maintenance
+    sched._run_batch(batch, staged, stage_s, "test")
+    direct = db.dsq_batch(queries, paths, k=K, recursive=rec,
+                          executor=executor)           # post-DSM truth
+    for i, t in enumerate(tickets):
+        res = t.result(30.0)
+        np.testing.assert_array_equal(res.ids[0], direct[i].ids[0])
+        np.testing.assert_array_equal(res.scores[0], direct[i].scores[0])
+
+
+# ----------------------------------------------------- threaded end to end
+def test_threaded_end_to_end_matches_direct(db, wiki):
+    """Threaded collector/executor pair under concurrent submitters: every
+    ticket resolves, and (flat executor: per-request results independent of
+    batch composition) each equals its direct single-request dsq."""
+    n = 24
+    queries, paths, rec = _requests(wiki, n)
+    sdsq = ScheduledDSQ(db, k=K, cfg=SchedulerConfig(max_batch=6,
+                                                     max_wait_ms=5.0))
+    tickets = [None] * n
+    with sdsq:
+        def client(lo, hi):
+            for i in range(lo, hi):
+                tickets[i] = sdsq.submit(queries[i], paths[i],
+                                         recursive=rec[i])
+        threads = [threading.Thread(target=client, args=(j, j + 8))
+                   for j in range(0, n, 8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        results = [t.result(30.0) for t in tickets]
+    for i, res in enumerate(results):
+        direct = db.dsq(queries[i], paths[i], k=K, recursive=rec[i])
+        np.testing.assert_array_equal(res.ids[0], direct.ids[0])
+        np.testing.assert_array_equal(res.scores[0], direct.scores[0])
+    snap = sdsq.metrics.snapshot()
+    assert snap["completed"] == n
+    assert snap["batches"] >= n // 6                   # coalesced, not 1:1
+    assert snap["accounting"]["sched_batches"] == snap["batches"]
+
+
+def test_execute_failure_fans_out_to_tickets():
+    def boom(payloads, staged):
+        raise ValueError("batch died")
+
+    s = ContinuousScheduler(boom, cfg=SchedulerConfig(max_batch=4,
+                                                      max_wait_ms=1e4))
+    t1, t2 = s.submit("a"), s.submit("b")
+    assert s.pump() == 2
+    for t in (t1, t2):
+        with pytest.raises(ValueError, match="batch died"):
+            t.result(5.0)
+
+
+# --------------------------------------------------- metrics + accounting
+def test_batch_accounting_merge_and_snapshot_reset():
+    a, b = BatchAccounting(), BatchAccounting()
+    a.batch_size, b.batch_size = 3, 5
+    a.plan_groups["scan"], b.plan_groups["scan"] = 1, 2
+    b.plan_groups["gather"] = 4
+    a.sched_batches, b.sched_batches = 1, 1
+    a.sched_queue_ns, b.sched_queue_ns = 100, 50
+    a.sched_arrival_ns, b.sched_arrival_ns = 900, 700
+    a.resolve_stats.stage_ns["resolve"] = 10
+    b.resolve_stats.stage_ns["resolve"] = 5
+    a.merge(b)
+    assert a.batch_size == 8
+    assert a.plan_groups == {"scan": 3, "gather": 4}
+    assert a.sched_batches == 2 and a.sched_queue_ns == 150
+    assert a.sched_arrival_ns == 700                   # earliest arrival wins
+    assert a.resolve_stats.stage_ns["resolve"] == 15
+    snap = a.snapshot(reset=True)
+    assert snap["batch_size"] == 8
+    assert snap["plan_groups"] == {"scan": 3, "gather": 4}
+    assert a.batch_size == 0 and a.plan_groups == {}   # reset for next window
+    assert a.sched_batches == 0
+
+
+def test_metrics_window_reset(db, wiki):
+    queries, paths, rec = _requests(wiki, 4)
+    sdsq = ScheduledDSQ(db, k=K, cfg=SchedulerConfig(max_batch=4,
+                                                     max_wait_ms=1e4))
+    for i in range(4):
+        sdsq.submit(queries[i], paths[i], recursive=rec[i])
+    sdsq.pump()
+    snap = sdsq.metrics.snapshot(reset=True)
+    assert snap["completed"] == 4 and snap["batches"] == 1
+    assert snap["occupancy"] == pytest.approx(1.0)
+    assert snap["p99_ms"] >= snap["p50_ms"] > 0
+    fresh = sdsq.metrics.snapshot()
+    assert fresh["completed"] == 0 and fresh["batches"] == 0
+
+
+# ----------------------------------------------------------- RAG async API
+def test_context_database_async_parity_and_stats(wiki):
+    ctx = ContextDatabase(dim=32)
+    rng = np.random.default_rng(0)
+    for i in range(min(120, len(wiki.entry_paths))):
+        ctx.add_context(wiki.vectors[i], wiki.entry_paths[i],
+                        ("L0", "L1", "L2")[i % 3],
+                        rng.integers(0, 99, size=12))
+    ctx.build("flat")
+    cfg = RAGConfig(k=5)
+    n = 6
+    queries, paths, _ = _requests(wiki, n)
+    ctx.start_serving(cfg, SchedulerConfig(max_batch=n, max_wait_ms=50.0))
+    with pytest.raises(RuntimeError):
+        ctx.start_serving(cfg)                         # double start refused
+    tickets = [ctx.submit_retrieve(queries[i], paths[i]) for i in range(n)]
+    async_res = [t.result(30.0) for t in tickets]
+    sync_res = ctx.retrieve_batch(queries, paths, cfg)
+    for (ha, sa), (hs, ss) in zip(async_res, sync_res):
+        assert [h.entry_id for h in ha] == [h.entry_id for h in hs]
+        assert sa["scope_size"] == ss["scope_size"]
+        assert "sched_occupancy" in sa                 # scheduler terms added
+        assert "sched_occupancy" not in ss             # direct path untouched
+    snap = ctx.serving_stats(reset=True)
+    assert snap["completed"] == n
+    assert snap["qps"] > 0
+    ctx.stop_serving()
+    assert ctx._serving is None
+    with pytest.raises(RuntimeError):
+        ctx.serving_stats()
