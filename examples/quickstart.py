@@ -296,3 +296,41 @@ t = tickets[0]
 print(f"ticket: batch_size={t.batch_size}, flush={t.flush!r}, "
       f"latency {t.latency_s * 1e3:.1f} ms "
       f"(measured from scheduled arrival — coordinated-omission-safe)")
+
+# --- calibrated cost model: measure the constants instead of trusting them --
+# Every decision above (gather-vs-scan crossover, rescore window, precision,
+# kernel tiling, scheduler batch shape) defaults to hand-set heuristics. A
+# one-off microbenchmark sweep calibrates them for THIS backend:
+#
+#     PYTHONPATH=src python -m repro.analysis.calibrate --smoke \
+#         --out calibration/mine.json
+#
+# and the artifact plugs straight into the database. The committed
+# calibration/cpu.json was swept on XLA:CPU, where the headline measured
+# decision is that int8 scans lose to fp32 (no int8 GEMM kernel), so the
+# model upgrades int8 requests to exact fp32 — 2-3x faster at recall 1.0.
+print("\n=== calibrated cost model ===")
+import os
+
+from repro.vectordb.costmodel import model_of
+
+art = os.path.join(os.path.dirname(__file__), "..", "calibration",
+                   "cpu.json")
+cal_db = DirectoryVectorDB(dim=DIM, calibration=art)   # or a dict, or False
+cal_db.ingest(rng.normal(size=(512, DIM)).astype(np.float32),
+              ["/docs/"] * 512)
+cal_db.build_ann("flat")
+model = model_of(cal_db.store)
+print(f"model: {model} threshold={model.gather_threshold():.3f} "
+      f"(heuristic hand-set: 0.05)")
+cal_q = rng.normal(size=(4, DIM)).astype(np.float32)
+cal_db.dsq_batch(cal_q, ["/docs/"] * 4, k=3, precision="int8")  # jit warmup
+res = cal_db.dsq_batch(cal_q, ["/docs/"] * 4, k=3, precision="int8")
+a = res[0].batch
+print(f"int8 request under the measured model -> groups "
+      f"{a.precision_groups} (upgraded when fp32 measures faster), "
+      f"plan_source={a.plan_source}, predicted ann "
+      f"{a.predicted_ann_ns / 1e3:.0f}us vs actual {a.ann_ns / 1e3:.0f}us")
+# REPRO_CALIBRATION=calibration/cpu.json applies the artifact process-wide
+# (every DirectoryVectorDB() without an explicit calibration= picks it up);
+# calibration=False pins the hand-set heuristics bit-for-bit.

@@ -1,0 +1,392 @@
+"""Calibration microbenchmark sweep -> versioned JSON artifact.
+
+Measures, on the *running* backend, every cost term the
+:class:`repro.vectordb.costmodel.CostModel` answers planner questions from:
+
+* linear scan cost per precision (fp32 / int8 / pq) against corpus bytes,
+* gather-plan cost against candidate-set size,
+* exact fp32 rescore cost against window width,
+* the solved gather/scan crossover selectivity,
+* the smallest rescore factor whose recall@k clears the recall gate,
+* the IVF nprobe recall/latency curve and its recall-floored default,
+* the fastest Pallas block shape per tunable kernel wrapper,
+* the batch-size service-time curve the continuous scheduler sizes from.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.calibrate --out calibration/cpu.json
+    PYTHONPATH=src python -m repro.analysis.calibrate --smoke   # reduced grid
+
+The artifact is loaded back with ``DirectoryVectorDB(calibration=path)`` or
+the ``REPRO_CALIBRATION`` env var; an artifact whose ``backend`` differs from
+the running one degrades to the roofline fallback (measurements do not
+transfer across backends — that is the point of calibrating).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+RECALL_GATE_RESCORE = 0.99    # two-phase recall@k floor for the factor pick
+RECALL_GATE_NPROBE = 0.95     # IVF recall@k floor for the default-nprobe pick
+
+
+def _clock_ns(fn, repeat: int) -> float:
+    """Median of per-call wall times (2 warmups absorb jit compilation and
+    the first post-compile dispatch, which reliably runs slow; the median
+    shrugs off GC/scheduler outliers that wreck a 2-point linear fit)."""
+    import jax
+    jax.block_until_ready(fn())               # jit compile
+    jax.block_until_ready(fn())               # slow first dispatch
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter_ns() - t0)
+    return float(np.median(ts))
+
+
+def _linfit(xs: Sequence[float], ys: Sequence[float]) -> Tuple[float, float]:
+    """(intercept a, slope) least-squares fit, both floored at >= 0 — a
+    negative launch overhead or negative marginal byte cost is always
+    measurement noise, and downstream crossover solving assumes
+    monotonicity."""
+    xs = np.asarray(xs, dtype=np.float64)
+    ys = np.asarray(ys, dtype=np.float64)
+    if len(xs) == 1:
+        return 0.0, float(ys[0] / max(xs[0], 1.0))
+    slope, a = np.polyfit(xs, ys, 1)
+    return float(max(a, 0.0)), float(max(slope, 1e-9))
+
+
+def _corpus(n: int, dim: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32)
+
+
+def _make_store(n: int, dim: int, seed: int):
+    from ..vectordb.flat import FlatExecutor
+    from ..vectordb.store import VectorStore
+    store = VectorStore(dim)
+    store.add(_corpus(n, dim, seed))
+    return store, FlatExecutor(store)
+
+
+# --------------------------------------------------------------- cost terms
+def sweep_scan(ns: Sequence[int], dim: int, batch: int, k: int,
+               repeat: int, seed: int) -> Tuple[Dict, Dict, List[Dict]]:
+    """Per-precision phase-1 scan terms + the exact-rescore term.
+
+    Scan launches are timed against *pre-packed* scope words — the batch
+    planner's steady state, where the epoch-validated mask cache has already
+    amortized the host-side packing — via the same jitted jnp twins the
+    executor dispatches. The quantized scans are timed at their rescore
+    window width (phase 1 only); the rescore is its own fitted term, which
+    is exactly how the model recombines them."""
+    from ..vectordb import flat
+    from ..vectordb.quant import quantize_rows, resolve_rescore_k
+    from ..vectordb.store import pack_ids_to_words
+    import jax.numpy as jnp
+    rows_out: List[Dict] = []
+    per_prec_pts: Dict[str, List[Tuple[float, float]]] = {
+        "fp32": [], "int8": [], "pq": []}
+    rescore_pts: List[Tuple[int, float]] = []
+    rng = np.random.default_rng(seed + 1)
+    for n in ns:
+        store, ex = _make_store(n, dim, seed)
+        q = rng.normal(size=(batch, dim)).astype(np.float32)
+        words = jnp.asarray(pack_ids_to_words(None, n))
+        sq = jnp.zeros(0, jnp.float32)          # metric "ip": sq is unread
+        r = resolve_rescore_k(k, None, n)
+        # rescore window sweep (n-free cost; the store just supplies rows)
+        for rr in sorted({k, 4 * k, 8 * k, 16 * k}):
+            if rr > n:
+                continue
+            cand = np.stack([rng.choice(n, size=rr, replace=False)
+                             for _ in range(batch)]).astype(np.int64)
+            t = _clock_ns(
+                lambda: flat.gather_rescore(store, q, cand, k), repeat)
+            rescore_pts.append((rr, t))
+        qj = jnp.asarray(q)
+        q_i8, q_s = quantize_rows(q)
+        q_i8, q_s = jnp.asarray(q_i8), jnp.asarray(q_s)
+        rows_dev = store.device_vectors()
+        qrows, qscales = store.device_q_vectors(), store.device_q_scales()
+        codes = store.device_pq_codes()
+        timers = {
+            "fp32": lambda: flat._scan_topk(qj, rows_dev, sq, words, k,
+                                            store.metric),
+            "int8": lambda: flat._scan_topk_i8(q_i8, q_s, qrows, qscales,
+                                               sq, words, r, store.metric),
+            # the per-query ADC LUT build is real per-call work: include it
+            "pq": lambda: flat._scan_topk_pq(
+                jnp.asarray(store.pq_lut(q)), codes, words, r),
+        }
+        for prec, fn in timers.items():
+            t = _clock_ns(fn, repeat)
+            bytes_per_row = {"fp32": 4 * dim, "int8": dim + 4,
+                             "pq": max(dim // 4, 1)}[prec]
+            per_prec_pts[prec].append((float(n * bytes_per_row), t))
+            rows_out.append({"term": "scan", "precision": prec, "n": n,
+                             "ns": t})
+    r_a, r_slope = _linfit([r for r, _ in rescore_pts],
+                           [t for _, t in rescore_pts])
+    rescore = {"a": r_a, "per_row": r_slope}
+    scan: Dict[str, Dict[str, float]] = {}
+    for prec, pts in per_prec_pts.items():
+        a, slope = _linfit([b for b, _ in pts], [t for _, t in pts])
+        scan[prec] = {"a": a, "per_byte": slope}
+    return scan, rescore, rows_out
+
+
+def sweep_gather(ns: Sequence[int], dim: int, batch: int, k: int,
+                 repeat: int, seed: int) -> Tuple[Dict, List[Dict]]:
+    rng = np.random.default_rng(seed + 2)
+    pts: List[Tuple[int, float]] = []
+    rows_out: List[Dict] = []
+    n = max(ns)
+    store, ex = _make_store(n, dim, seed)
+    q = rng.normal(size=(batch, dim)).astype(np.float32)
+    for frac in (0.005, 0.02, 0.05, 0.1, 0.2):
+        m = max(int(frac * n), k + 1)
+        cand = np.sort(rng.choice(n, size=m, replace=False)).astype(np.uint32)
+        t = _clock_ns(
+            lambda: ex.search(q, k, candidate_ids=cand, plan="gather"),
+            repeat)
+        pts.append((m, t))
+        rows_out.append({"term": "gather", "m": m, "ns": t})
+    a, slope = _linfit([m for m, _ in pts], [t for _, t in pts])
+    return {"a": a, "per_row": slope}, rows_out
+
+
+def solve_threshold(scan: Dict, gather: Dict, ns: Sequence[int],
+                    dim: int) -> float:
+    """Measured gather/scan crossover selectivity: the fraction m/n where
+    the fitted gather cost meets the fitted fp32 scan cost, median across
+    the calibrated corpus sizes (clamping to the sane band happens in the
+    CostModel, not here — the artifact records the raw measurement)."""
+    fracs = []
+    for n in ns:
+        scan_t = scan["fp32"]["a"] + scan["fp32"]["per_byte"] * n * 4 * dim
+        m_star = (scan_t - gather["a"]) / max(gather["per_row"], 1e-9)
+        fracs.append(max(m_star, 0.0) / n)
+    return float(np.median(fracs))
+
+
+# ------------------------------------------------------------- recall gates
+def sweep_rescore_recall(n: int, dim: int, k: int,
+                         seed: int) -> Tuple[int, Dict[str, float]]:
+    """Smallest rescore factor whose int8 two-phase recall@k clears the
+    gate, plus the whole curve for the artifact."""
+    store, ex = _make_store(n, dim, seed)
+    rng = np.random.default_rng(seed + 3)
+    q = rng.normal(size=(32, dim)).astype(np.float32)
+    allc = np.arange(n, dtype=np.uint32)
+    _, exact = ex.search(q, k, candidate_ids=allc, plan="scan")
+    curve: Dict[str, float] = {}
+    best: Optional[int] = None
+    for factor in (1, 2, 4, 8):
+        _, got = ex.search(q, k, candidate_ids=allc, plan="scan",
+                           precision="int8", rescore_k=factor * k)
+        hits = sum(len(set(map(int, g)) & set(map(int, e)))
+                   for g, e in zip(got, exact))
+        recall = hits / float(exact.shape[0] * k)
+        curve[str(factor)] = recall
+        if best is None and recall >= RECALL_GATE_RESCORE:
+            best = factor
+    return best if best is not None else 8, curve
+
+
+def sweep_nprobe(n: int, dim: int, k: int, repeat: int,
+                 seed: int) -> Tuple[int, List[Dict]]:
+    """IVF recall/latency curve over probe depths; the default is the
+    smallest depth clearing the recall gate against the full-probe oracle
+    (the CostModel additionally floors it at the hand-set 8)."""
+    from ..vectordb.ivf import IVFIndex
+    store, _ = _make_store(n, dim, seed)
+    n_lists = max(int(np.sqrt(n)), 8)
+    ivf = IVFIndex(store, n_lists=n_lists, seed=seed)  # partitions all rows
+    rng = np.random.default_rng(seed + 4)
+    q = rng.normal(size=(16, dim)).astype(np.float32)
+    allc = np.arange(n, dtype=np.uint32)
+    _, oracle = ivf.search(q, k, candidate_ids=allc, nprobe=n_lists)
+    curve: List[Dict] = []
+    best: Optional[int] = None
+    for nprobe in (4, 8, 16, 32):
+        if nprobe > n_lists:
+            break
+        t = _clock_ns(lambda: ivf.search(q, k, candidate_ids=allc,
+                                         nprobe=nprobe), repeat)
+        _, got = ivf.search(q, k, candidate_ids=allc, nprobe=nprobe)
+        hits = sum(len(set(map(int, g)) & set(map(int, o)))
+                   for g, o in zip(got, oracle))
+        recall = hits / float(oracle.shape[0] * k)
+        curve.append({"nprobe": nprobe, "recall": recall, "ns": t})
+        if best is None and recall >= RECALL_GATE_NPROBE:
+            best = nprobe
+    return best if best is not None else n_lists, curve
+
+
+# ------------------------------------------------------------ kernel tuning
+def sweep_kernel_blocks(n: int, dim: int, batch: int, k: int, repeat: int,
+                        seed: int,
+                        block_ns: Sequence[int]) -> Dict[str, Dict]:
+    """Fastest (block_q, block_n) per tunable Pallas wrapper. Results are
+    block-shape independent (tiling is pure perf), so the sweep just times
+    each candidate shape on a representative shape and keeps the argmin."""
+    from ..kernels import ops
+    from ..vectordb.quant import quantize_rows
+    from ..vectordb.store import pack_ids_to_words
+
+    store, _ = _make_store(n, dim, seed)
+    store.device_q_vectors()                   # materialize quantized mirror
+    store.device_pq_codes()                    # + PQ codes
+    rng = np.random.default_rng(seed + 5)
+    q = rng.normal(size=(batch, dim)).astype(np.float32)
+    q_i8, q_s = quantize_rows(q)
+    lut = store.pq_lut(q)
+    ids = np.sort(rng.choice(n, size=n // 2, replace=False))
+    words = pack_ids_to_words(ids.astype(np.uint32), n)
+    mask = np.zeros(n, dtype=bool)
+    mask[ids] = True
+    sids = np.zeros(batch, dtype=np.int32)
+    import jax.numpy as jnp
+    sqz = jnp.zeros(n, jnp.float32)   # metric "ip": the sq tile is unread
+
+    def runs(bq: int, bn: int) -> Dict[str, object]:
+        return {
+            "scoped_topk": lambda: ops.scoped_topk(
+                q, store.device_vectors(), mask, k=k, block_q=bq, block_n=bn),
+            "scoped_topk_i8": lambda: ops.scoped_topk_i8(
+                q_i8, q_s, store.device_q_vectors(), store.device_q_scales(),
+                sqz, mask, k=k, block_q=bq, block_n=bn),
+            "scoped_topk_pq": lambda: ops.scoped_topk_pq(
+                lut, store.device_pq_codes(), mask, k=k, block_q=bq,
+                block_n=bn),
+            "multi_scope_topk": lambda: ops.multi_scope_topk(
+                q, store.device_vectors(), words[None, :], sids, k=k,
+                block_q=bq, block_n=bn),
+            "multi_scope_topk_i8": lambda: ops.multi_scope_topk_i8(
+                q_i8, q_s, store.device_q_vectors(), store.device_q_scales(),
+                sqz, words[None, :], sids, k=k, block_q=bq, block_n=bn),
+            "multi_scope_topk_pq": lambda: ops.multi_scope_topk_pq(
+                lut, store.device_pq_codes(), words[None, :], sids, k=k,
+                block_q=bq, block_n=bn),
+        }
+
+    best: Dict[str, Dict] = {}
+    for bn in block_ns:
+        for name, fn in runs(8, bn).items():
+            t = _clock_ns(fn, repeat)
+            if name not in best or t < best[name]["us"] * 1e3:
+                best[name] = {"block_q": 8, "block_n": int(bn),
+                              "us": t / 1e3}
+    return best
+
+
+# --------------------------------------------------------------- scheduler
+def sweep_scheduler(n: int, dim: int, k: int, repeat: int,
+                    seed: int, batches: Sequence[int]) -> Dict:
+    """Batch-size service-time curve through the real planned dsq_batch
+    path; ``max_batch`` lands at the knee (lowest us/request), and
+    ``max_wait_ms`` is one service interval of that batch — waiting longer
+    than one service time buys no extra batching."""
+    from ..vectordb.database import DirectoryVectorDB
+    db = DirectoryVectorDB(dim=dim, calibration=False)
+    rng = np.random.default_rng(seed + 6)
+    vecs = _corpus(n, dim, seed)
+    paths = [f"/cal/d{i % 16}" for i in range(n)]
+    db.ingest(vecs, paths)
+    db.build_ann("flat")
+    curve: Dict[str, float] = {}
+    best_b, best_per_req = batches[0], float("inf")
+    best_service_ns = 0.0
+    for b in batches:
+        q = rng.normal(size=(b, dim)).astype(np.float32)
+        p = [f"/cal/d{i % 16}" for i in range(b)]
+        t = _clock_ns(lambda: db.dsq_batch(q, p, k=k), repeat)
+        curve[str(b)] = t / 1e3
+        if t / b < best_per_req:
+            best_per_req, best_b, best_service_ns = t / b, b, t
+    return {"max_batch": int(best_b),
+            "max_wait_ms": float(min(max(best_service_ns / 1e6, 0.5), 8.0)),
+            "service_us": curve}
+
+
+# --------------------------------------------------------------------- main
+def calibrate(dim: int = 64, seed: int = 0, smoke: bool = False,
+              backend: Optional[str] = None) -> "CalibrationArtifact":
+    from ..vectordb.costmodel import SCHEMA_VERSION, CalibrationArtifact
+    import jax
+    backend = backend or jax.default_backend()
+    k = 10
+    batch = 8
+    if smoke:
+        ns, repeat = (2048, 6144), 5
+        block_ns = (512, 1024)
+        sched_batches = (1, 8, 32)
+    else:
+        ns, repeat = (4096, 16384, 32768), 5
+        block_ns = (256, 512, 1024, 2048)
+        sched_batches = (1, 8, 16, 32, 64)
+
+    print(f"[calibrate] backend={backend} dim={dim} ns={ns} "
+          f"smoke={smoke}", file=sys.stderr)
+    scan, rescore, _ = sweep_scan(ns, dim, batch, k, repeat, seed)
+    gather, _ = sweep_gather(ns, dim, batch, k, repeat, seed)
+    threshold = solve_threshold(scan, gather, ns, dim)
+    print(f"[calibrate] crossover fraction {threshold:.4f}", file=sys.stderr)
+    factor, recall_curve = sweep_rescore_recall(min(ns), dim, k, seed)
+    nprobe, nprobe_curve = sweep_nprobe(min(ns), dim, k, repeat, seed)
+    kernels = sweep_kernel_blocks(min(ns), dim, batch, k,
+                                  max(repeat // 2, 1), seed, block_ns)
+    sched = sweep_scheduler(min(ns), dim, k, max(repeat // 2, 1), seed,
+                            sched_batches)
+    data = {
+        "schema_version": SCHEMA_VERSION,
+        "created": int(time.time()),
+        "backend": backend,
+        "device_kind": str(jax.devices()[0].device_kind),
+        "dim": dim,
+        "batch": batch,
+        "seed": seed,
+        "smoke": bool(smoke),
+        "terms": {
+            "row_bytes": {"fp32": 4 * dim, "int8": dim + 4,
+                          "pq": max(dim // 4, 1)},
+            "scan_ns": scan,
+            "gather_ns": gather,
+            "rescore_ns": rescore,
+            "gather_threshold": threshold,
+            "rescore_factor": int(factor),
+            "rescore_recall": recall_curve,
+            "nprobe": {"default": int(nprobe), "curve": nprobe_curve},
+            "kernel_blocks": kernels,
+            "scheduler": sched,
+        },
+    }
+    return CalibrationArtifact(data)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default calibration/<backend>.json)")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid (CI-sized)")
+    args = ap.parse_args(argv)
+    art = calibrate(dim=args.dim, seed=args.seed, smoke=args.smoke)
+    out = args.out or f"calibration/{art.backend}.json"
+    art.save(out)
+    print(f"[calibrate] wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

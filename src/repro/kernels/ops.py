@@ -5,7 +5,7 @@ set ``REPRO_PALLAS_COMPILE=1`` or pass interpret=False).
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,48 @@ from .scoped_topk import scoped_topk_pq as _scoped_topk_pq
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
+# Tuned (block_q, block_n) per wrapper, installed from a measured calibration
+# artifact (vectordb.costmodel.install_kernel_tuning). Tiling is a pure
+# performance knob — results are block-shape independent — so a process-global
+# registry is safe; callers passing explicit block args still win.
+_DEFAULT_BLOCK_Q = 8
+_DEFAULT_BLOCK_N = 1024
+_BLOCK_OVERRIDES: Dict[str, Tuple[int, int]] = {}
+
+
+def set_block_overrides(overrides: Mapping[str, Tuple[int, int]]) -> None:
+    """Replace the tuned-block registry (pass ``{}`` to restore defaults)."""
+    new = {str(name): (int(bq), int(bn))
+           for name, (bq, bn) in dict(overrides).items()}
+    _BLOCK_OVERRIDES.clear()
+    _BLOCK_OVERRIDES.update(new)
+
+
+def get_block_overrides() -> Dict[str, Tuple[int, int]]:
+    return dict(_BLOCK_OVERRIDES)
+
+
+def _blocks(name: str, block_q: Optional[int],
+            block_n: Optional[int]) -> Tuple[int, int]:
+    """Resolve a wrapper's block shape: explicit caller args > tuned registry
+    entry > hand-set defaults."""
+    tuned = _BLOCK_OVERRIDES.get(name)
+    if block_q is None:
+        block_q = tuned[0] if tuned else _DEFAULT_BLOCK_Q
+    if block_n is None:
+        block_n = tuned[1] if tuned else _DEFAULT_BLOCK_N
+    return block_q, block_n
+
+
+def _align_block_n(block_n: int, n_rows: int, floor: int = 128) -> int:
+    """Clamp ``block_n`` to the (floored) row count, then round UP to a
+    multiple of 32. The packed-word kernels assert ``block_n % 32 == 0`` and
+    a bare ``min(block_n, max(128, n_rows))`` clamp hands them an unaligned
+    block for odd row counts (e.g. n_rows=137); rounding up is always safe
+    because the row axis is padded to the block multiple anyway."""
+    block_n = min(block_n, max(floor, n_rows))
+    return ((block_n + 31) // 32) * 32
+
 
 def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
     n = x.shape[axis]
@@ -37,15 +79,18 @@ def _pad_to(x: np.ndarray | jax.Array, axis: int, mult: int, value=0):
 
 
 def scoped_topk(queries, rows, mask, k: int = 10, metric: str = "ip",
-                block_q: int = 8, block_n: int = 1024,
+                block_q: Optional[int] = None, block_n: Optional[int] = None,
                 interpret: Optional[bool] = None
                 ) -> Tuple[jax.Array, jax.Array]:
-    """Masked top-k over rows; pads q/n to block multiples, unpads results."""
+    """Masked top-k over rows; pads q/n to block multiples, unpads results.
+    Block shapes default to the tuned registry (see
+    :func:`set_block_overrides`), falling back to 8x1024."""
     interpret = _INTERPRET if interpret is None else interpret
+    block_q, block_n = _blocks("scoped_topk", block_q, block_n)
     queries = jnp.asarray(queries, dtype=jnp.float32)
     rows = jnp.asarray(rows)
     mask = jnp.asarray(mask)
-    block_n = min(block_n, max(128, rows.shape[0]))
+    block_n = _align_block_n(block_n, rows.shape[0])
     block_q = min(block_q, max(1, queries.shape[0]))
     qp, nq = _pad_to(queries, 0, block_q)
     rp, _ = _pad_to(rows, 0, block_n)
@@ -57,7 +102,8 @@ def scoped_topk(queries, rows, mask, k: int = 10, metric: str = "ip",
 
 
 def scoped_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask, k: int = 10,
-                   metric: str = "ip", block_q: int = 8, block_n: int = 1024,
+                   metric: str = "ip", block_q: Optional[int] = None,
+                   block_n: Optional[int] = None,
                    interpret: Optional[bool] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Masked top-k over the int8 scalar-quantized store (the scan phase of
@@ -65,9 +111,10 @@ def scoped_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask, k: int = 10,
     Row-axis padding is scale-0 zero codes with a 0 mask bit — score 0,
     never a candidate."""
     interpret = _INTERPRET if interpret is None else interpret
+    block_q, block_n = _blocks("scoped_topk_i8", block_q, block_n)
     q_i8 = jnp.asarray(q_i8, dtype=jnp.int8)
     rows_i8 = jnp.asarray(rows_i8, dtype=jnp.int8)
-    block_n = min(block_n, max(128, rows_i8.shape[0]))
+    block_n = _align_block_n(block_n, rows_i8.shape[0])
     block_q = min(block_q, max(1, q_i8.shape[0]))
     qp, nq = _pad_to(q_i8, 0, block_q)
     qsp, _ = _pad_to(jnp.asarray(q_scale, jnp.float32), 0, block_q)
@@ -83,7 +130,8 @@ def scoped_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask, k: int = 10,
 
 def multi_scope_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask_words,
                         scope_ids, k: int = 10, metric: str = "ip",
-                        block_q: int = 8, block_n: int = 1024,
+                        block_q: Optional[int] = None,
+                        block_n: Optional[int] = None,
                         interpret: Optional[bool] = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Single-launch heterogeneous masked top-k over the int8 store: packed
@@ -91,12 +139,12 @@ def multi_scope_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask_words,
     int8/int32 scoring like :func:`scoped_topk_i8`. Pads q to block_q, n
     (codes + scales + norms + mask words) to block_n, unpads results."""
     interpret = _INTERPRET if interpret is None else interpret
+    block_q, block_n = _blocks("multi_scope_topk_i8", block_q, block_n)
     q_i8 = jnp.asarray(q_i8, dtype=jnp.int8)
     rows_i8 = jnp.asarray(rows_i8, dtype=jnp.int8)
     mask_words = jnp.asarray(mask_words, dtype=jnp.uint32)
     scope_ids = jnp.asarray(scope_ids, dtype=jnp.int32)
-    block_n = min(block_n, max(128, rows_i8.shape[0]))
-    block_n = ((block_n + 31) // 32) * 32
+    block_n = _align_block_n(block_n, rows_i8.shape[0])
     block_q = min(block_q, max(1, q_i8.shape[0]))
     qp, nq = _pad_to(q_i8, 0, block_q)
     qsp, _ = _pad_to(jnp.asarray(q_scale, jnp.float32), 0, block_q)
@@ -114,7 +162,8 @@ def multi_scope_topk_i8(q_i8, q_scale, rows_i8, row_scale, sq, mask_words,
 
 
 def scoped_topk_pq(lut, codes, mask, k: int = 10,
-                   block_q: int = 8, block_n: int = 1024,
+                   block_q: Optional[int] = None,
+                   block_n: Optional[int] = None,
                    interpret: Optional[bool] = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Masked top-k over the PQ code store (the ADC scan phase of the
@@ -122,9 +171,10 @@ def scoped_topk_pq(lut, codes, mask, k: int = 10,
     LUT folds the metric in, so there is no metric argument. Row-axis
     padding is code-0 rows with a 0 mask bit — never a candidate."""
     interpret = _INTERPRET if interpret is None else interpret
+    block_q, block_n = _blocks("scoped_topk_pq", block_q, block_n)
     lut = jnp.asarray(lut, dtype=jnp.float32)
     codes = jnp.asarray(codes, dtype=jnp.uint8)
-    block_n = min(block_n, max(128, codes.shape[0]))
+    block_n = _align_block_n(block_n, codes.shape[0])
     block_q = min(block_q, max(1, lut.shape[0]))
     lp, nq = _pad_to(lut, 0, block_q)
     cp, _ = _pad_to(codes, 0, block_n)
@@ -135,7 +185,8 @@ def scoped_topk_pq(lut, codes, mask, k: int = 10,
 
 
 def multi_scope_topk_pq(lut, codes, mask_words, scope_ids, k: int = 10,
-                        block_q: int = 8, block_n: int = 1024,
+                        block_q: Optional[int] = None,
+                        block_n: Optional[int] = None,
                         interpret: Optional[bool] = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Single-launch heterogeneous masked top-k over the PQ code store:
@@ -144,12 +195,12 @@ def multi_scope_topk_pq(lut, codes, mask_words, scope_ids, k: int = 10,
     :func:`scoped_topk_pq`. Pads q to block_q, n (codes + mask words) to
     block_n, unpads results."""
     interpret = _INTERPRET if interpret is None else interpret
+    block_q, block_n = _blocks("multi_scope_topk_pq", block_q, block_n)
     lut = jnp.asarray(lut, dtype=jnp.float32)
     codes = jnp.asarray(codes, dtype=jnp.uint8)
     mask_words = jnp.asarray(mask_words, dtype=jnp.uint32)
     scope_ids = jnp.asarray(scope_ids, dtype=jnp.int32)
-    block_n = min(block_n, max(128, codes.shape[0]))
-    block_n = ((block_n + 31) // 32) * 32
+    block_n = _align_block_n(block_n, codes.shape[0])
     block_q = min(block_q, max(1, lut.shape[0]))
     lp, nq = _pad_to(lut, 0, block_q)
     cp, n = _pad_to(codes, 0, block_n)
@@ -163,19 +214,20 @@ def multi_scope_topk_pq(lut, codes, mask_words, scope_ids, k: int = 10,
 
 
 def multi_scope_topk(queries, rows, mask_words, scope_ids, k: int = 10,
-                     metric: str = "ip", block_q: int = 8, block_n: int = 1024,
+                     metric: str = "ip", block_q: Optional[int] = None,
+                     block_n: Optional[int] = None,
                      interpret: Optional[bool] = None
                      ) -> Tuple[jax.Array, jax.Array]:
     """Single-launch heterogeneous masked top-k: per-query scope-id
     indirection into a packed (n_scopes, n/32) uint32 mask matrix. Pads q to
     block_q, n (rows + mask words) to block_n, unpads results."""
     interpret = _INTERPRET if interpret is None else interpret
+    block_q, block_n = _blocks("multi_scope_topk", block_q, block_n)
     queries = jnp.asarray(queries, dtype=jnp.float32)
     rows = jnp.asarray(rows)
     mask_words = jnp.asarray(mask_words, dtype=jnp.uint32)
     scope_ids = jnp.asarray(scope_ids, dtype=jnp.int32)
-    block_n = min(block_n, max(128, rows.shape[0]))
-    block_n = ((block_n + 31) // 32) * 32
+    block_n = _align_block_n(block_n, rows.shape[0])
     block_q = min(block_q, max(1, queries.shape[0]))
     qp, nq = _pad_to(queries, 0, block_q)
     rp, n = _pad_to(rows, 0, block_n)
@@ -262,4 +314,5 @@ def flash_decode(q, k, v, length_mask=None, block_s: int = 512,
 __all__ = ["scoped_topk", "scoped_topk_i8", "scoped_topk_pq",
            "multi_scope_topk", "multi_scope_topk_i8", "multi_scope_topk_pq",
            "ivf_gather_topk", "mask_and_popcount", "bitmap_patch",
-           "flash_decode", "ref"]
+           "flash_decode", "set_block_overrides", "get_block_overrides",
+           "ref"]

@@ -53,8 +53,10 @@ class RAGConfig:
 class ContextDatabase:
     """Tiered directory-scoped context store (OpenViking-style)."""
 
-    def __init__(self, dim: int, scope_strategy: str = "triehi"):
-        self.db = DirectoryVectorDB(dim=dim, scope_strategy=scope_strategy)
+    def __init__(self, dim: int, scope_strategy: str = "triehi",
+                 calibration=None):
+        self.db = DirectoryVectorDB(dim=dim, scope_strategy=scope_strategy,
+                                    calibration=calibration)
         self.payloads: Dict[int, ContextEntry] = {}
         self._serving: Optional[ScheduledDSQ] = None
 
@@ -108,6 +110,13 @@ class ContextDatabase:
         stats = {"directory_us": res.directory_ns / 1e3,
                  "ann_us": res.ann_ns / 1e3, "scope_size": res.scope_size,
                  "plan": res.plan, "scope_shared": res.scope_shared}
+        if res.batch is not None and res.batch.plan_source:
+            # which decision layer planned this batch, and (for calibrated
+            # models) the predicted-vs-actual ANN cost — mispredictions are
+            # production counters, not bench-only artifacts
+            stats["plan_source"] = res.batch.plan_source
+            if res.batch.predicted_ann_ns:
+                stats["predicted_ann_us"] = res.batch.predicted_ann_ns / 1e3
         if res.batch is not None and res.batch.n_shards:
             stats["n_shards"] = res.batch.n_shards
             stats["shard_mask_bytes"] = res.batch.shard_mask_bytes

@@ -74,11 +74,20 @@ class SchedulerConfig:
     batch to fill; the oldest admitted request's deadline triggers the flush.
     ``queue_capacity`` bounds each tenant's admission queue (admissions past
     it raise :class:`AdmissionError`). ``tenant_weights`` sets the per-flush
-    fair shares (default weight 1.0)."""
+    fair shares (default weight 1.0).
+
+    ``adaptive=True`` (set by a measured cost model's
+    ``scheduler_defaults()``) lets the scheduler refine ``max_wait_ms``
+    online from the service times it observes: waiting longer than one
+    batch-service interval buys no extra batching, so the effective wait
+    tracks an EWMA of the service time, clamped to
+    [``min_wait_ms``, the configured ``max_wait_ms`` SLO]."""
     max_batch: int = 32
     max_wait_ms: float = 4.0
     queue_capacity: int = 256
     tenant_weights: Dict[str, float] = field(default_factory=dict)
+    adaptive: bool = False
+    min_wait_ms: float = 0.5
 
 
 class ServingTicket:
@@ -239,6 +248,10 @@ class ContinuousScheduler:
         self.execute_fn = execute
         self.stage_fn = stage
         self.cfg = cfg or SchedulerConfig()
+        # adaptive-wait state: the configured max_wait_ms is the SLO ceiling;
+        # the EWMA of observed batch service times refines the effective wait
+        self._slo_wait_ms = self.cfg.max_wait_ms
+        self._service_ewma_s = 0.0
         self.acct_of = acct_of
         self.clock = clock or time.perf_counter
         self.metrics = ServingMetrics(self.cfg.max_batch, self.clock)
@@ -360,6 +373,13 @@ class ContinuousScheduler:
                 self._cond.notify_all()
             return
         t1 = self.clock()
+        if self.cfg.adaptive:
+            ewma = self._service_ewma_s
+            self._service_ewma_s = (0.2 * (t1 - t0) + 0.8 * ewma
+                                    if ewma else t1 - t0)
+            self.cfg.max_wait_ms = min(
+                self._slo_wait_ms,
+                max(self.cfg.min_wait_ms, self._service_ewma_s * 1e3))
         acct = self.acct_of(results) if self.acct_of is not None else None
         if acct is not None:
             # serving-pipeline timestamps onto the results' own accounting:
@@ -547,6 +567,14 @@ class ScheduledDSQ:
         self.precision = precision
         self.rescore_k = rescore_k
         self.use_pallas = use_pallas
+        if cfg is None:
+            # a measured cost model sizes the batch at the knee of its
+            # calibrated service-time curve (and turns on adaptive wait);
+            # heuristic/roofline models keep the stock SchedulerConfig
+            from ..vectordb.costmodel import model_of
+            defaults = model_of(db.store).scheduler_defaults()
+            if defaults is not None:
+                cfg = SchedulerConfig(**defaults)
         self.scheduler = ContinuousScheduler(
             self._execute,
             stage=self._stage if stage else None,

@@ -1,3 +1,5 @@
+from .costmodel import (HEURISTIC, CalibrationArtifact, CostModel, model_of,
+                        resolve_calibration)
 from .database import DSQResult, DirectoryVectorDB
 from .flat import FlatExecutor
 from .graph import PGIndex
@@ -10,4 +12,6 @@ from .store import ShardedStoreView, VectorStore, pack_ids_to_words
 __all__ = ["DirectoryVectorDB", "DSQResult", "FlatExecutor", "PGIndex",
            "IVFIndex", "VectorStore", "BatchAccounting", "BatchPlanner",
            "PlanGroup", "ScopeKey", "ScopeMaskCache", "device_popcount",
-           "ShardedExecutor", "ShardedStoreView", "pack_ids_to_words"]
+           "ShardedExecutor", "ShardedStoreView", "pack_ids_to_words",
+           "CalibrationArtifact", "CostModel", "HEURISTIC", "model_of",
+           "resolve_calibration"]

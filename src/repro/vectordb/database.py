@@ -18,6 +18,7 @@ import numpy as np
 from ..core import (DSM, DSMBatchResult, DSMExecutor, DSMJournal, DSMStats,
                     ResolveStats, ScopeIndex, make_scope_index)
 from ..core.interface import normalize_batch
+from .costmodel import install_kernel_tuning, model_of, resolve_calibration
 from .flat import FlatExecutor
 from .graph import PGIndex
 from .ivf import IVFIndex
@@ -50,15 +51,29 @@ class DirectoryVectorDB:
     def __init__(self, dim: int, metric: str = "ip",
                  scope_strategy: str = "triehi",
                  journal_path: Optional[str] = None,
-                 pq_m: Optional[int] = None):
+                 pq_m: Optional[int] = None,
+                 calibration=None):
         """``journal_path`` makes every namespace's DSM executor journal to
         ``{journal_path}.{namespace}``. Reopening an existing journal
         continues its sequence numbers from the persisted tail; after the
         caller restores index state on restart, :meth:`recover` replays any
         op whose COMMIT was lost to a crash. ``pq_m`` overrides the PQ
         subspace count (default: the largest divisor of ``dim`` at or
-        below ``dim // 4``)."""
+        below ``dim // 4``).
+
+        ``calibration`` attaches the measured cost model that replaces the
+        hand-set planner/executor constants: a calibration-artifact path,
+        parsed artifact dict, or :class:`~repro.vectordb.costmodel.CostModel`
+        (see ``repro.analysis.calibrate``). ``None`` (the default) reads the
+        ``REPRO_CALIBRATION`` env var, falling back to the heuristic model —
+        which reproduces the pre-calibration behavior bit-for-bit; ``False``
+        pins the heuristic model explicitly, ignoring the env var. An
+        artifact calibrated on a different backend degrades to the roofline
+        model (analytic crossovers, no precision/rescore/nprobe retuning)."""
         self.store = VectorStore(dim, metric, pq_m=pq_m)
+        self.store.cost_model = resolve_calibration(calibration)
+        if self.store.cost_model.source == "measured":
+            install_kernel_tuning(self.store.cost_model)
         self.scope_strategy = scope_strategy
         self.namespaces: Dict[str, ScopeIndex] = {}
         self.executors: Dict[str, object] = {}
@@ -165,6 +180,14 @@ class DirectoryVectorDB:
                 f"precision {precision!r} not in (fp32, int8, pq)")
         if precision == "fp32" and self.store.tiered_active():
             precision = "pq"
+        # measured cost model may upgrade int8 -> exact fp32 (cheaper on
+        # backends without an int8 GEMM) and widen the rescore window;
+        # request-level so the loop and batch paths decide identically
+        model = model_of(self.store)
+        precision = model.pick_precision(
+            precision, len(self.store), k, rescore_k,
+            tiered=self.store.tiered_active(), dim=self.store.dim)
+        rescore_k = model.pick_rescore_k(k, rescore_k, len(self.store))
         idx = self.namespaces[namespace]
         stats = ResolveStats()
         t0 = time.perf_counter_ns()
@@ -194,7 +217,8 @@ class DirectoryVectorDB:
         if namespace not in self._planners:
             cache = ScopeMaskCache()
             self.namespace(namespace).subscribe_dsm(cache.apply_delta)
-            self._planners[namespace] = BatchPlanner(cache=cache)
+            self._planners[namespace] = BatchPlanner(
+                cache=cache, model=model_of(self.store))
         return self._planners[namespace]
 
     def dsq_batch(self, queries: np.ndarray, paths: Sequence[str],
@@ -242,6 +266,13 @@ class DirectoryVectorDB:
                 f"precision {precision!r} not in (fp32, int8, pq)")
         if precision == "fp32" and self.store.tiered_active():
             precision = "pq"
+        # same request-level cost-model decision as :meth:`dsq` — both paths
+        # must flip identically for batch==loop bit-identity
+        model = model_of(self.store)
+        precision = model.pick_precision(
+            precision, len(self.store), k, rescore_k,
+            tiered=self.store.tiered_active(), dim=self.store.dim)
+        rescore_k = model.pick_rescore_k(k, rescore_k, len(self.store))
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         B = queries.shape[0]
         if len(paths) != B:
@@ -253,10 +284,12 @@ class DirectoryVectorDB:
             raise ValueError(f"executor {executor!r} not built "
                              f"(have {sorted(self.executors)})")
         if isinstance(ex, IVFIndex) and set(executor_params) <= {"nprobe"}:
+            nprobe = executor_params.get("nprobe")
+            if nprobe is None:
+                nprobe = model.default_nprobe(ex.n_lists)
             return self._dsq_batch_ivf(ex, queries, paths, k, recursive,
                                        exclude, namespace, use_pallas,
-                                       executor_params.get("nprobe", 8),
-                                       precision, rescore_k)
+                                       nprobe, precision, rescore_k)
         if isinstance(ex, PGIndex) and set(executor_params) <= {"ef_search"}:
             return self._dsq_batch_pg(ex, queries, paths, k, recursive,
                                       exclude, namespace,
@@ -358,6 +391,12 @@ class DirectoryVectorDB:
             rescore_k=rescore_k)
         t1 = time.perf_counter_ns()
         acct.directory_ns = t1 - t0
+        model = model_of(self.store)
+        acct.plan_source = model.source
+        acct.predicted_ann_ns = model.estimate_batch_ns(
+            [(g.plan, g.precision, g.scope_size, len(g.request_idx))
+             for g in groups],
+            n=len(self.store), k=k, rescore_k=rescore_k, dim=self.store.dim)
         out_scores = np.full((B, k), -np.inf, np.float32)
         out_ids = np.full((B, k), -1, np.int64)
         fetch0 = self.store.rescore_fetch_bytes

@@ -26,10 +26,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# the hand-set crossover now lives in costmodel (re-exported here because
+# this module owns the decision *rule* that consumes it)
+from .costmodel import GATHER_THRESHOLD, model_of
 from .quant import int_exact_dot, quantize_rows, resolve_rescore_k
 from .store import VectorStore, pack_ids_to_words
-
-GATHER_THRESHOLD = 0.05   # use gather plan below this scope selectivity
 
 
 def choose_plan(m: int, n: int, k: int,
@@ -37,7 +38,9 @@ def choose_plan(m: int, n: int, k: int,
     """THE gather/scan decision rule. ``FlatExecutor.search``, the
     ``BatchPlanner`` and ``ShardedExecutor.search`` all delegate here — the
     batch==loop and sharded==flat bit-identity contracts require every path
-    to pick the same plan for the same scope."""
+    to pick the same plan for the same scope. Calibrated deployments pass
+    ``threshold=model.gather_threshold(n, k)``; the rule itself never
+    changes, only the measured crossover."""
     return "gather" if m <= max(k, threshold * n) else "scan"
 
 
@@ -307,7 +310,8 @@ class FlatExecutor:
             return (np.full((q, k), -np.inf, np.float32),
                     np.full((q, k), -1, np.int64))
         if plan is None:
-            plan = choose_plan(m, n, k)
+            plan = choose_plan(
+                m, n, k, model_of(self.store).gather_threshold(n, k))
         if precision == "int8":
             r = resolve_rescore_k(k, rescore_k, m)
             # a gather scope the rescore window covers entirely gains nothing

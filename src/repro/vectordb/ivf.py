@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .costmodel import model_of
 from .store import VectorStore
 
 # Per-list padding granularity of the CSR layout. The fused launch expands
@@ -300,11 +301,14 @@ class IVFIndex:
     # ----------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                candidate_ids: Optional[np.ndarray] = None,
-               nprobe: int = 8, precision: str = "fp32",
+               nprobe: Optional[int] = None, precision: str = "fp32",
                rescore_k: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Probe nprobe partitions per query; returns (scores, ids) (q, k).
-        Device-batched single-scope front door over :meth:`search_multi`."""
+        Device-batched single-scope front door over :meth:`search_multi`.
+        ``nprobe=None`` asks the store's cost model (hand-set 8 under the
+        heuristic model; the measured recall-floored depth when
+        calibrated)."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         n = len(self.store)
         from .store import pack_ids_to_words
@@ -315,7 +319,8 @@ class IVFIndex:
                                  rescore_k=rescore_k)
 
     def search_multi(self, queries: np.ndarray, mask_words: np.ndarray,
-                     scope_ids: np.ndarray, k: int, nprobe: int = 8,
+                     scope_ids: np.ndarray, k: int,
+                     nprobe: Optional[int] = None,
                      use_pallas: bool = False, precision: str = "fp32",
                      rescore_k: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
@@ -338,6 +343,8 @@ class IVFIndex:
         if n == 0:
             return out_scores, out_ids
         lay = self.layout()
+        if nprobe is None:
+            nprobe = model_of(self.store).default_nprobe(self.n_lists)
         nprobe = int(max(1, min(nprobe, self.n_lists)))
         C = nprobe * lay.max_aligned
         if C == 0:
@@ -404,7 +411,8 @@ class IVFIndex:
 
     def search_loop(self, queries: np.ndarray, k: int,
                     candidate_ids: Optional[np.ndarray] = None,
-                    nprobe: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+                    nprobe: Optional[int] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
         """Per-query host loop — the pre-batching reference oracle the
         device path is tested against."""
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
@@ -413,6 +421,8 @@ class IVFIndex:
         # paths rank near-equidistant centroids identically
         qc = np.sum((queries[:, None, :] - self.centers[None, :, :]) ** 2,
                     axis=-1)
+        if nprobe is None:
+            nprobe = model_of(self.store).default_nprobe(self.n_lists)
         nprobe = int(max(1, min(nprobe, self.n_lists)))
         # stable sort breaks exact-distance ties by lowest index, same as the
         # device path's lax.top_k

@@ -32,6 +32,7 @@ import numpy as np
 from ..core import ResolveStats, RoaringBitmap, ScopeIndex
 from ..core import paths as P
 from ..core.interface import DSMDelta, ScopeSpec
+from .costmodel import CostModel
 from .flat import GATHER_THRESHOLD, choose_plan
 from .quant import resolve_rescore_k
 
@@ -319,6 +320,11 @@ class BatchAccounting:
     sched_service_ns: int = 0        # batch execute wall-clock
     sched_occupancy: float = 0.0     # summed batch_size / max_batch
     sched_shed: int = 0              # admissions rejected (backpressure)
+    # cost-model observability (PR 8): which decision layer produced the
+    # plans, and what it predicted the ANN phase would cost — so planner
+    # mispredictions show up in production counters, not only in benches
+    plan_source: str = ""            # "measured" | "roofline" | "heuristic"
+    predicted_ann_ns: int = 0        # model-predicted ranking time (0 = n/a)
 
     def merge(self, other: "BatchAccounting") -> "BatchAccounting":
         """Accumulate ``other`` into this accounting — the measurement-window
@@ -345,6 +351,9 @@ class BatchAccounting:
                         setattr(self.resolve_stats, sf.name, mv + sv)
             elif f.name == "tiered":
                 self.tiered = self.tiered or ov
+            elif f.name == "plan_source":
+                if ov:
+                    self.plan_source = ov
             elif f.name == "sched_arrival_ns":
                 if ov:
                     self.sched_arrival_ns = (min(self.sched_arrival_ns, ov)
@@ -392,8 +401,14 @@ def device_popcount(words: np.ndarray) -> int:
 
 class BatchPlanner:
     def __init__(self, gather_threshold: float = GATHER_THRESHOLD,
-                 cache: Optional[ScopeMaskCache] = None):
+                 cache: Optional[ScopeMaskCache] = None,
+                 model: Optional[CostModel] = None):
         self.gather_threshold = gather_threshold
+        # when a cost model is attached (DirectoryVectorDB passes the
+        # store's), its calibrated crossover replaces the hand-set
+        # gather_threshold — the same model FlatExecutor/ShardedExecutor
+        # read, which is what keeps batch==loop==sharded plans identical
+        self.model = model
         self.cache = cache if cache is not None else ScopeMaskCache()
         # cumulative per-scope request counts across every planned batch —
         # the DSQ access statistics the tiered store's hot-directory pinning
@@ -406,7 +421,9 @@ class BatchPlanner:
         ``flat.choose_plan``."""
         if scope_size == 0:
             return "empty"
-        return choose_plan(scope_size, n, k, self.gather_threshold)
+        threshold = (self.model.gather_threshold(n, k)
+                     if self.model is not None else self.gather_threshold)
+        return choose_plan(scope_size, n, k, threshold)
 
     def resolve_scopes(self, index: ScopeIndex, n: int,
                        keys: Sequence[ScopeKey],

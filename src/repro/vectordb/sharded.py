@@ -39,6 +39,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .costmodel import model_of
 from .flat import FlatExecutor, choose_plan, gather_rescore, pad_topk
 from .quant import quantize_rows, resolve_rescore_k
 from .store import ShardedStoreView, VectorStore, pack_ids_to_words
@@ -375,7 +376,8 @@ class ShardedExecutor:
             return (np.full((q, k), -np.inf, np.float32),
                     np.full((q, k), -1, np.int64))
         if plan is None:
-            plan = choose_plan(m, n, k)
+            plan = choose_plan(
+                m, n, k, model_of(self.store).gather_threshold(n, k))
         kk = min(k, m)
         if plan == "gather":
             return self.flat.search(queries, k, candidate_ids=candidate_ids,

@@ -82,6 +82,11 @@ class VectorStore:
             raise ValueError(f"metric {metric!r} not in {METRICS}")
         self.dim = dim
         self.metric = metric
+        # attached cost model (vectordb.costmodel.CostModel) — None means
+        # the heuristic constants; every decision site reads it through
+        # costmodel.model_of(store), so one attachment calibrates the whole
+        # executor matrix consistently (bit-identity across paths)
+        self.cost_model = None
         self._rows = np.zeros((capacity, dim), dtype=np.float32)
         self._n = 0
         self._device_cache: Optional[jnp.ndarray] = None

@@ -587,3 +587,58 @@ def test_oracle_self_consistency():
     assert o.resolve("/a/") == {0, 1, 2}
     assert o.remove("/a/") == {0, 1, 2}
     assert o.entries == {}
+
+
+@pytest.mark.parametrize("seed", [3])
+def test_differential_fuzz_perturbed_artifact(seed):
+    """Differential fuzz under a randomly-perturbed calibration artifact:
+    measured decisions (crossover threshold, rescore factor, precision
+    flips, kernel block shapes, nprobe default) may change *plans*, but the
+    recall/consistency gates above must hold for ANY artifact — the clamp
+    envelope in CostModel is what makes perturbation safe. All three
+    strategy DBs share one model, so cross-strategy bit-identity holds."""
+    import jax
+
+    from repro.kernels import ops as kops
+    from repro.vectordb.costmodel import (TUNABLE_KERNELS,
+                                          install_kernel_tuning,
+                                          resolve_calibration)
+    rng = np.random.default_rng(seed)
+
+    def term():
+        return {"a": float(rng.uniform(0, 2e5)),
+                "per_byte": float(rng.uniform(0, 5))}
+
+    art = {
+        "schema_version": 1, "backend": jax.default_backend(), "dim": DIM,
+        "terms": {
+            "gather_threshold": float(rng.uniform(0.0, 0.6)),
+            "rescore_factor": int(rng.integers(1, 9)),
+            "nprobe": {"default": int(rng.integers(1, 64))},
+            "scan_ns": {p: term() for p in ("fp32", "int8", "pq")},
+            "gather_ns": {"a": float(rng.uniform(0, 2e5)),
+                          "per_row": float(rng.uniform(0, 2e3))},
+            "rescore_ns": {"a": float(rng.uniform(0, 2e5)),
+                           "per_row": float(rng.uniform(0, 2e3))},
+            "kernel_blocks": {
+                name: {"block_q": int(rng.choice([2, 4, 8, 16])),
+                       "block_n": int(rng.choice([64, 128, 256, 512,
+                                                  1024])),
+                       "us": 1.0}
+                for name in TUNABLE_KERNELS},
+            "scheduler": {"max_batch": int(rng.integers(1, 64)),
+                          "max_wait_ms": float(rng.uniform(0.5, 8.0)),
+                          "service_us": {}},
+        },
+    }
+    model = resolve_calibration(art)
+    assert model.source == "measured"
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            state = FuzzState(seed, tmp)
+            for db in state.dbs.values():
+                db.store.cost_model = model
+            install_kernel_tuning(model)
+            _run_fuzz(state, n_ops=18)
+    finally:
+        kops.set_block_overrides({})

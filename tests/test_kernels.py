@@ -355,3 +355,67 @@ def test_flash_decode_sweep(b, h, kv, s, d, dtype):
     tol = 3e-2 if dtype == jnp.bfloat16 else 3e-4
     np.testing.assert_allclose(np.asarray(o1, np.float32),
                                np.asarray(o2, np.float32), rtol=tol, atol=tol)
+
+
+# ------------------------------------------------- block-clamp regression
+def test_align_block_n_unit():
+    """The clamp must stay a multiple of 32 (the packed-word kernels assert
+    it) while never exceeding the padded row range by more than one word.
+    The old ``min(block_n, max(128, n))`` clamp handed 137 straight through."""
+    assert ops._align_block_n(1024, 137) == 160      # round UP, not down
+    assert ops._align_block_n(1024, 4096) == 1024    # large n: untouched
+    assert ops._align_block_n(1024, 128) == 128
+    assert ops._align_block_n(100, 5000) == 128      # floor wins, aligned
+    assert ops._align_block_n(256, 1) == 128
+    for n in (1, 31, 97, 137, 161, 4097):
+        for bn in (100, 128, 256, 1024, 4096):
+            got = ops._align_block_n(bn, n)
+            assert got % 32 == 0 and got >= 32, (bn, n, got)
+
+
+@pytest.mark.parametrize("n", [97, 137, 261])
+def test_adversarial_row_counts_all_kernels(n):
+    """Every tunable wrapper at odd row counts with an oversized requested
+    block_n: the clamp path must produce aligned blocks and oracle-exact
+    results (the regression that motivated ``_align_block_n``)."""
+    d, m, k, nq = 32, 4, 7, 3
+    Q = RNG.normal(size=(nq, d)).astype(np.float32)
+    X = RNG.normal(size=(n, d)).astype(np.float32)
+    mask = RNG.random(n) < 0.6
+    pad = (-n) % 32
+    dense = RNG.random((2, n)) < 0.6
+    words = np.stack([
+        np.packbits(np.pad(mk, (0, pad)), bitorder="little").view(np.uint32)
+        for mk in dense])
+    sid = RNG.integers(0, 2, size=nq).astype(np.int32)
+
+    def check(got, want):
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(want[1]))
+
+    check(ops.scoped_topk(Q, X, mask, k=k, block_n=4096),
+          ref.scoped_topk_ref(jnp.asarray(Q), jnp.asarray(X),
+                              jnp.asarray(mask), k=k))
+    check(ops.multi_scope_topk(Q, X, words, sid, k=k, block_n=4096),
+          ref.multi_scope_topk_ref(jnp.asarray(Q), jnp.asarray(X),
+                                   jnp.asarray(words), jnp.asarray(sid),
+                                   k=k))
+    q_i8, q_s = _quantize(Q)
+    x_i8, x_s = _quantize(X)
+    sq = _q_norms(x_i8, x_s)
+    check(ops.scoped_topk_i8(q_i8, q_s, x_i8, x_s, sq, mask, k=k,
+                             block_n=4096),
+          ref.scoped_topk_i8_ref(q_i8, q_s, x_i8, x_s, sq, mask, k=k))
+    check(ops.multi_scope_topk_i8(q_i8, q_s, x_i8, x_s, sq, words, sid,
+                                  k=k, block_n=4096),
+          ref.multi_scope_topk_i8_ref(q_i8, q_s, x_i8, x_s, sq, words, sid,
+                                      k=k))
+    lut = RNG.normal(size=(nq, m, 256)).astype(np.float32)
+    codes = RNG.integers(0, 256, size=(n, m)).astype(np.uint8)
+    check(ops.scoped_topk_pq(lut, codes, mask, k=k, block_n=4096),
+          ref.scoped_topk_pq_ref(lut, codes, mask, k=k))
+    check(ops.multi_scope_topk_pq(lut, codes, words, sid, k=k,
+                                  block_n=4096),
+          ref.multi_scope_topk_pq_ref(lut, codes, words, sid, k=k))

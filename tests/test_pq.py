@@ -247,7 +247,10 @@ def test_tombstones_respected_by_pq_scan():
 
 # ----------------------------------------------------- planner + accounting
 def test_planner_precision_pq_per_group():
-    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+    # calibration=False: asserts hand-set planner internals (plan labels
+    # depend on the hand-set gather threshold)
+    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi",
+                           calibration=False)
     paths = ["/broad/"] * 900 + ["/narrow/"] * 20
     db.ingest(RNG.normal(size=(920, DIM)).astype(np.float32), paths)
     db.build_ann("flat")
@@ -266,7 +269,10 @@ def test_planner_precision_pq_per_group():
 
 
 def test_batch_accounting_pq_terms_exclude_tombstones():
-    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+    # calibration=False: rescore_candidates == 6 * 40 assumes the hand-set
+    # rescore factor
+    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi",
+                           calibration=False)
     ids = db.ingest(RNG.normal(size=(1200, DIM)).astype(np.float32),
                     ["/a/"] * 600 + ["/b/"] * 600)
     db.build_ann("flat")

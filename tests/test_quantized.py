@@ -164,7 +164,10 @@ def test_tombstones_respected_by_int8_scan():
 
 # ----------------------------------------------------- planner + accounting
 def test_planner_precision_per_group():
-    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+    # calibration=False: this test asserts the hand-set planner internals
+    # (a measured artifact may legitimately flip int8 -> fp32)
+    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi",
+                           calibration=False)
     paths = ["/broad/"] * 900 + ["/narrow/"] * 20
     db.ingest(RNG.normal(size=(920, DIM)).astype(np.float32), paths)
     db.build_ann("flat")
@@ -186,7 +189,10 @@ def test_planner_precision_per_group():
 
 
 def test_batch_accounting_quantized_terms():
-    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi")
+    # calibration=False: rescore_candidates == 6 * 40 assumes the hand-set
+    # rescore factor and no precision flips
+    db = DirectoryVectorDB(dim=DIM, scope_strategy="triehi",
+                           calibration=False)
     db.ingest(RNG.normal(size=(1200, DIM)).astype(np.float32),
               ["/a/"] * 600 + ["/b/"] * 600)
     db.build_ann("flat")
@@ -220,7 +226,9 @@ def test_dsq_rejects_unknown_precision():
 
 def test_serving_surfaces_quantized_stats():
     from repro.serving.rag import ContextDatabase, RAGConfig
-    ctx = ContextDatabase(dim=DIM)
+    # calibration=False: the rescore_candidates floor assumes the int8
+    # request is not measured-upgraded to fp32
+    ctx = ContextDatabase(dim=DIM, calibration=False)
     for i in range(300):
         ctx.add_context(RNG.normal(size=DIM).astype(np.float32),
                         f"/docs/{i % 3}/", "L0",

@@ -29,11 +29,12 @@ def run_with_devices(code: str, n: int = 8) -> str:
     return out.stdout
 
 
-def _mixed_db(strategy="triehi", n=600, d=16, seed=0):
+def _mixed_db(strategy="triehi", n=600, d=16, seed=0, calibration=None):
     from repro.vectordb import DirectoryVectorDB
     rng = np.random.default_rng(seed)
     paths = [f"/a/b{i % 7}/" if i % 3 else "/a/" for i in range(n)]
-    db = DirectoryVectorDB(dim=d, scope_strategy=strategy)
+    db = DirectoryVectorDB(dim=d, scope_strategy=strategy,
+                           calibration=calibration)
     db.ingest(rng.normal(size=(n, d)).astype(np.float32), paths)
     db.build_ann("flat")
     db.build_ann("sharded")
@@ -241,7 +242,9 @@ def test_sharded_int8_two_phase_matches_flat_int8():
     rescore) must return the same top-k sets and fp32 scores as the flat
     int8 path, and — with an exhaustive rescore window — the exact fp32
     result."""
-    db, rng = _mixed_db()
+    # calibration=False: the quantized-byte accounting assumes the int8
+    # request is not measured-upgraded to fp32
+    db, rng = _mixed_db(calibration=False)
     B, d = 8, 16
     q = rng.normal(size=(B, d)).astype(np.float32)
     scopes = [["/a/", "/", "/a/b2/"][i % 3] for i in range(B)]
