@@ -334,3 +334,36 @@ print(f"int8 request under the measured model -> groups "
 # REPRO_CALIBRATION=calibration/cpu.json applies the artifact process-wide
 # (every DirectoryVectorDB() without an explicit calibration= picks it up);
 # calibration=False pins the hand-set heuristics bit-for-bit.
+
+# --- online maintenance: serve through streaming churn ----------------------
+# Under live delete + drifted re-ingest traffic the built indexes rot:
+# tombstones pile up in the store, IVF partitions skew off their frozen
+# centroids, PG rows fill with dead neighbors. A MaintenanceManager runs the
+# counter-moves (PG repair / compaction with full id-remap / IVF
+# repartition) as journaled, crash-recoverable ops — either inline between
+# ingest waves, or from the scheduler's idle-first maintenance slots
+# (ScheduledDSQ(maintenance=True)) so serving p99 stays bounded.
+print("\n=== online maintenance ===")
+from repro.vectordb import MaintenancePolicy
+
+m_db = DirectoryVectorDB(dim=DIM)
+m_db.mkdir("/docs/")
+m_db.ingest(rng.normal(size=(512, DIM)).astype(np.float32), ["/docs/"] * 512)
+m_db.build_ann("flat")
+m_db.build_ann("ivf", n_lists=8)
+m_db.build_ann("pg")
+mgr = m_db.maintenance(policy=MaintenancePolicy(tombstone_min=32,
+                                                tombstone_fraction=0.05,
+                                                repair_deletes=32))
+for wave in range(4):                      # churn: delete + drifted re-ingest
+    for i in range(wave * 64, wave * 64 + 64):
+        m_db.delete(i)
+    m_db.ingest(rng.normal(size=(64, DIM)).astype(np.float32),
+                ["/docs/"] * 64)
+    mgr.run_all()                          # bounded slices between waves
+while mgr.run_all():                       # quiesce: drain the deferred
+    pass                                   # repair queue, then compact
+print(f"after churn: rows={len(m_db.store)} dead={m_db.store.n_deleted} "
+      f"ops={mgr.stats()['ops_run']}")     # bounded rows, zero tombstones
+# a crash mid-op replays from the journal: db.recover() re-runs any
+# uncommitted maintenance intent deterministically (gen-counter idempotent)

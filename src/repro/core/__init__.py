@@ -9,7 +9,7 @@ from .catalog import Catalog, PathRef
 from .idset import RoaringBitmap
 from .interface import DSMDelta, DSMStats, ResolveStats, ScopeIndex
 from .ops import (DSM, DSMBatchResult, DSMExecutor, DSMJournal, DSQ,
-                  RegionLockManager, regions_overlap)
+                  MAINT_PREFIX, RegionLockManager, regions_overlap)
 from .pe_offline import PEOfflineIndex
 from .pe_online import PEOnlineIndex
 from .triehi import TrieHIIndex, TrieNode
@@ -32,7 +32,8 @@ def make_scope_index(name: str) -> ScopeIndex:
 __all__ = [
     "paths", "Catalog", "PathRef", "RoaringBitmap", "ResolveStats",
     "ScopeIndex", "DSQ", "DSM", "DSMBatchResult", "DSMDelta", "DSMExecutor",
-    "DSMJournal", "DSMStats", "RegionLockManager", "regions_overlap",
+    "DSMJournal", "DSMStats", "MAINT_PREFIX", "RegionLockManager",
+    "regions_overlap",
     "PEOnlineIndex", "PEOfflineIndex", "TrieHIIndex", "TrieNode",
     "STRATEGIES", "make_scope_index",
 ]

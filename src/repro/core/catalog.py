@@ -64,5 +64,12 @@ class Catalog:
     def items(self):
         return self._map.items()
 
+    def remap_ids(self, mapping) -> None:
+        """Rewrite entry ids under an order-preserving store compaction.
+        ``mapping[old_id]`` is the new id, or a negative value for rows the
+        compaction dropped (tombstones, which hold no binding anyway)."""
+        self._map = {int(mapping[eid]): ref for eid, ref in self._map.items()
+                     if 0 <= eid < len(mapping) and mapping[eid] >= 0}
+
     def memory_bytes(self) -> int:
         return 64 * len(self._map)  # dict-slot estimate; excluded from comparisons anyway

@@ -270,6 +270,29 @@ class ScopeIndex(abc.ABC):
         unbind its entries from the catalog, and return the removed entry-id
         set (the caller tombstones those ids at the vector store)."""
 
+    # -------------------------------------------------------------- remap
+    @staticmethod
+    def _remap_bitmap(bm: RoaringBitmap, mapping) -> RoaringBitmap:
+        """Rewrite a posting/aggregate set under an order-preserving id
+        compaction (``mapping[old_id] -> new_id``, negative = dropped)."""
+        import numpy as np
+        old = bm.to_array()
+        if len(old) == 0:
+            return RoaringBitmap()
+        new = np.asarray(mapping)[old.astype(np.int64)]
+        new = new[new >= 0]
+        return RoaringBitmap.from_array(new.astype(np.uint32))
+
+    def remap_ids(self, mapping) -> None:
+        """Tombstone compaction renumbered every live entry: rewrite all
+        posting/aggregate containers and catalog bindings in place.
+        Deliberately does NOT bump scope epochs — directory *membership* is
+        unchanged, only the id encoding moved, so cached tokens stay valid
+        provided every mask cache receives the paired ``IdRemap`` event and
+        patches its packed words the same way (see planner.ScopeMaskCache
+        and ShardedExecutor)."""
+        raise NotImplementedError
+
     # ------------------------------------------------------------ inspection
     @abc.abstractmethod
     def has_dir(self, path: P.Path | str) -> bool: ...

@@ -42,21 +42,46 @@ class DSQ:
 
 
 # --------------------------------------------------------------------- DSM
+#: DSM kinds with this prefix are *background-maintenance* intents
+#: (IVF re-partition, PG repair, tombstone compaction). They are journaled
+#: and region-locked through the same machinery as structural mutations,
+#: but applied by a ``MaintenanceManager`` rather than ``DSM.apply`` — the
+#: ``src`` field carries an opaque ``k=v&k=v`` payload, not a path.
+MAINT_PREFIX = "maint_"
+
+
 @dataclass(frozen=True)
 class DSM:
-    kind: str                 # "move" | "merge" | "mkdir" | "remove"
+    kind: str                 # "move" | "merge" | "mkdir" | "remove" | maint_*
     src: str
     dst: str = ""             # move: new parent; merge: target subtree
+
+    @property
+    def is_maintenance(self) -> bool:
+        return self.kind.startswith(MAINT_PREFIX)
 
     def affected_region(self) -> List[P.Path]:
         """Prefix regions this mutation touches (for overlap serialization):
         move covers the source subtree + destination path; merge covers the
         source and target subtrees; remove covers the removed subtree
-        (§IV-A Consistency During Updates)."""
+        (§IV-A Consistency During Updates). Maintenance ops rebuild
+        store-global structures (layouts, id space), so they claim the root
+        region and serialize against every structural mutation."""
+        if self.is_maintenance:
+            return [P.ROOT]
         regions = [P.parse(self.src)]
         if self.dst:
             regions.append(P.parse(self.dst))
         return regions
+
+    def payload(self) -> Dict[str, str]:
+        """Decode a maintenance op's ``k=v&k=v`` ``src`` payload."""
+        out: Dict[str, str] = {}
+        for part in self.src.split("&"):
+            if "=" in part:
+                k, _, v = part.partition("=")
+                out[k] = v
+        return out
 
     def apply(self, index: ScopeIndex,
               stats: Optional[DSMStats] = None) -> Optional[RoaringBitmap]:
@@ -163,10 +188,22 @@ class DSMJournal:
     Only the live intent set (BEGINs without a COMMIT/ABORT) is retained in
     memory: resolved pairs are dropped as they pair up, so a long-lived
     maintenance process stays O(outstanding ops), not O(history), and
-    ``uncommitted()`` never rescans the file."""
+    ``uncommitted()`` never rescans the file.
 
-    def __init__(self, path: Optional[str] = None):
+    The *file* is bounded the same way: every ``auto_compact_every``
+    resolved (committed/aborted) records the journal rewrites itself down
+    to the outstanding BEGINs plus a ``seq`` watermark record. The
+    watermark is what keeps sequence numbers monotonic across a
+    compact-to-empty + reopen — without it a compacted file with no
+    pending intents is empty and a reopen would restart seqs at 0,
+    recreating the reopen-collision bug the scan-for-max exists to
+    prevent."""
+
+    def __init__(self, path: Optional[str] = None,
+                 auto_compact_every: int = 512):
         self.path = path
+        self.auto_compact_every = auto_compact_every
+        self._resolved_since_compact = 0
         self._pending: Dict[int, DSM] = {}
         self._seq = 0
         self._lock = threading.Lock()
@@ -226,6 +263,7 @@ class DSMJournal:
         with self._lock:
             self._write([{"event": "commit", "seq": seq}])
             self._pending.pop(seq, None)
+            self._note_resolved(1)
 
     def commit_many(self, seqs: Sequence[int]) -> None:
         """Group commit: one record, one append+flush for the whole batch."""
@@ -235,6 +273,7 @@ class DSMJournal:
             self._write([{"event": "commit", "seqs": list(seqs)}])
             for s in seqs:
                 self._pending.pop(s, None)
+            self._note_resolved(len(seqs))
 
     def abort(self, seq: int) -> None:
         """Record that a journaled mutation raised before changing anything,
@@ -242,6 +281,15 @@ class DSMJournal:
         with self._lock:
             self._write([{"event": "abort", "seq": seq}])
             self._pending.pop(seq, None)
+            self._note_resolved(1)
+
+    def _note_resolved(self, n: int) -> None:
+        """Count resolved intents and auto-compact past the threshold
+        (called with ``_lock`` held)."""
+        self._resolved_since_compact += n
+        if (self.path and self.auto_compact_every
+                and self._resolved_since_compact >= self.auto_compact_every):
+            self._compact_locked()
 
     def uncommitted(self) -> List[Tuple[int, DSM]]:
         """(seq, op) pairs whose BEGIN has no matching COMMIT/ABORT, in seq
@@ -256,15 +304,24 @@ class DSMJournal:
         if not self.path:
             return
         with self._lock:
-            tmp = self.path + ".compact"
-            with open(tmp, "w") as f:
-                for seq, op in sorted(self._pending.items()):
-                    f.write(json.dumps(
-                        {"event": "begin", "seq": seq, "kind": op.kind,
-                         "src": op.src, "dst": op.dst,
-                         "ts": time.time()}) + "\n")
-                f.flush()
-            os.replace(tmp, self.path)
+            self._compact_locked()
+
+    def _compact_locked(self) -> None:
+        tmp = self.path + ".compact"
+        now = time.time()
+        with open(tmp, "w") as f:
+            if self._seq > 0:
+                # seq watermark: keeps seqs monotonic across reopen even
+                # when every intent below resolved (file otherwise empty)
+                f.write(json.dumps({"event": "seq", "seq": self._seq - 1,
+                                    "ts": now}) + "\n")
+            for seq, op in sorted(self._pending.items()):
+                f.write(json.dumps(
+                    {"event": "begin", "seq": seq, "kind": op.kind,
+                     "src": op.src, "dst": op.dst, "ts": now}) + "\n")
+            f.flush()
+        os.replace(tmp, self.path)
+        self._resolved_since_compact = 0
 
     @staticmethod
     def recover(path: str) -> List[DSM]:
@@ -293,6 +350,10 @@ class DSMExecutor:
         self.index = index
         self.journal = journal or DSMJournal()
         self.locks = RegionLockManager()
+        # Optional ``fn(op) -> replayed`` hook for ``maint_*`` crash
+        # suspects; set by the MaintenanceManager that owns the op kinds
+        # (the scope index alone cannot probe or re-run a layout rebuild).
+        self.maintenance_replay = None
 
     def apply(self, op: DSM,
               stats: Optional[DSMStats] = None) -> Optional[RoaringBitmap]:
@@ -419,7 +480,15 @@ class DSMExecutor:
                 replayed = False
                 result: Optional[RoaringBitmap] = None
                 try:
-                    if self._needs_replay(op):
+                    if op.is_maintenance:
+                        # the maintenance manager owns the probe+apply: its
+                        # generation counters tell whether the crashed
+                        # rebuild reached the swap before the COMMIT was
+                        # lost. Without a registered manager the intent is
+                        # dropped (re-triggered by the next due check).
+                        if self.maintenance_replay is not None:
+                            replayed = bool(self.maintenance_replay(op))
+                    elif self._needs_replay(op):
                         result = op.apply(self.index, stats)
                         replayed = True
                     self.journal.commit(seq)

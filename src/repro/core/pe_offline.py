@@ -272,6 +272,14 @@ class PEOfflineIndex(ScopeIndex):
             stats.epochs_bumped += 1
         return removed
 
+    # -------------------------------------------------------------- remap
+    def remap_ids(self, mapping) -> None:
+        with self._agg_latch:
+            for k in list(self.postings):
+                self.postings[k] = self._remap_bitmap(self.postings[k],
+                                                      mapping)
+        self.catalog.remap_ids(mapping)
+
     # ------------------------------------------------------------ inspection
     def has_dir(self, path: P.Path | str) -> bool:
         return P.parse(path) in self.aux

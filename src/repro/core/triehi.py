@@ -468,6 +468,18 @@ class TrieHIIndex(ScopeIndex):
                     out |= node.inclusive - children
         return out
 
+    # -------------------------------------------------------------- remap
+    def remap_ids(self, mapping) -> None:
+        """Order-preserving id compaction: rewrite every node's Inc/Local
+        aggregates and the catalog. Node epochs are deliberately untouched
+        (membership is unchanged; paired mask caches patch their packed
+        words from the same mapping)."""
+        with self._agg_latch:
+            for node in self.iter_nodes():
+                node.inclusive = self._remap_bitmap(node.inclusive, mapping)
+                node.local = self._remap_bitmap(node.local, mapping)
+        self.catalog.remap_ids(mapping)
+
     # ------------------------------------------------------------ inspection
     def has_dir(self, path: P.Path | str) -> bool:
         return self._walk(P.parse(path), create=False) is not None

@@ -244,10 +244,36 @@ class ContinuousScheduler:
                  cfg: Optional[SchedulerConfig] = None,
                  acct_of: Optional[Callable[[List],
                                             Optional[BatchAccounting]]] = None,
-                 clock: Callable[[], float] = None):
+                 clock: Callable[[], float] = None,
+                 maintenance: Optional[Callable[[], Optional[dict]]] = None,
+                 maintenance_every: int = 8):
+        """``maintenance`` is the low-priority background-work hook (e.g.
+        ``MaintenanceManager.step``): called on the executor thread, BETWEEN
+        device batches — never concurrently with a launch — and idle-first:
+        once per idle wait interval when the staging queue runs dry, and
+        after every ``maintenance_every``-th executed batch *if no next
+        batch is already staged* (a waiting batch wins the slot). Under
+        sustained saturation a slot is still forced every
+        ``8 * maintenance_every`` batches so maintenance cannot starve.
+        One call must do one *bounded* unit of work (or nothing, returning
+        None), so serving p99 is bounded by one maintenance step, not a
+        full rebuild backlog."""
         self.execute_fn = execute
         self.stage_fn = stage
         self.cfg = cfg or SchedulerConfig()
+        self.maintenance_fn = maintenance
+        self.maintenance_every = max(1, maintenance_every)
+        self.maintenance_force_every = 8 * self.maintenance_every
+        # duty-cycle pacing for threaded idle slots: a slice may start only
+        # after ~3x the EWMA slice cost has elapsed since the last one, so
+        # background repair never monopolizes the process (GIL + cache)
+        # while requests trickle in between batches
+        self.maintenance_duty_factor = 3.0
+        self._maint_cost_ewma_s = 0.0
+        self._maint_last_end_s = 0.0
+        self._since_maintenance = 0
+        self.maintenance_steps = 0
+        self.maintenance_error: Optional[BaseException] = None
         # adaptive-wait state: the configured max_wait_ms is the SLO ceiling;
         # the EWMA of observed batch service times refines the effective wait
         self._slo_wait_ms = self.cfg.max_wait_ms
@@ -415,10 +441,43 @@ class ContinuousScheduler:
         with self._cond:
             batch = self._form_batch()
         if not batch:
+            self._maybe_maintain(force=True)
             return 0
         staged, stage_s = self._do_stage(batch)
         self._run_batch(batch, staged, stage_s, "pump")
+        self._since_maintenance += 1
+        self._maybe_maintain()
         return len(batch)
+
+    def _maybe_maintain(self, force: bool = False,
+                        busy: bool = False) -> None:
+        """One bounded maintenance step on the executing thread (between
+        batches — maintenance never overlaps a device launch). ``busy``
+        means a staged batch is already waiting: yield the slot to it
+        unless maintenance has been starved past the forced interval. A
+        step that raises records the error and disables the hook rather
+        than killing the serving loop."""
+        if self.maintenance_fn is None:
+            return
+        if not force:
+            if self._since_maintenance < self.maintenance_every:
+                return
+            if busy and self._since_maintenance < self.maintenance_force_every:
+                return
+        self._since_maintenance = 0
+        t0 = self.clock()
+        try:
+            if self.maintenance_fn() is not None:
+                self.maintenance_steps += 1
+                dt = self.clock() - t0
+                self._maint_cost_ewma_s = (dt if not self._maint_cost_ewma_s
+                                           else 0.7 * self._maint_cost_ewma_s
+                                           + 0.3 * dt)
+        except BaseException as e:          # noqa: BLE001 — keep serving
+            self.maintenance_error = e
+            self.maintenance_fn = None
+        finally:
+            self._maint_last_end_s = self.clock()
 
     # ------------------------------------------------------------ thread pair
     def _collect_loop(self) -> None:
@@ -451,10 +510,25 @@ class ContinuousScheduler:
 
     def _execute_loop(self) -> None:
         while True:
-            item = self._staged.get()
+            if self.maintenance_fn is not None:
+                try:
+                    item = self._staged.get(
+                        timeout=max(self.cfg.max_wait_ms, 1.0) / 1e3)
+                except queue.Empty:
+                    # idle slot: no batch staged — maintenance runs for
+                    # free, paced to a bounded duty cycle (see __init__)
+                    gap = self.clock() - self._maint_last_end_s
+                    if gap >= (self.maintenance_duty_factor
+                               * self._maint_cost_ewma_s):
+                        self._maybe_maintain(force=True)
+                    continue
+            else:
+                item = self._staged.get()
             if item is None:
                 break
             self._run_batch(*item)
+            self._since_maintenance += 1
+            self._maybe_maintain(busy=not self._staged.empty())
 
     def start(self) -> "ContinuousScheduler":
         if self._running:
@@ -559,7 +633,13 @@ class ScheduledDSQ:
                  executor: str = "flat", precision: str = "fp32",
                  rescore_k: Optional[int] = None, use_pallas: bool = False,
                  cfg: Optional[SchedulerConfig] = None,
-                 stage: bool = True):
+                 stage: bool = True, maintenance: object = None,
+                 maintenance_every: int = 8):
+        """``maintenance=True`` attaches the db's
+        :class:`~repro.vectordb.maintenance.MaintenanceManager` for
+        ``namespace`` as the scheduler's between-batches hook; passing a
+        manager (or any ``step``-bearing object / zero-arg callable) uses
+        that instead."""
         self.db = db
         self.k = k
         self.namespace = namespace
@@ -575,11 +655,17 @@ class ScheduledDSQ:
             defaults = model_of(db.store).scheduler_defaults()
             if defaults is not None:
                 cfg = SchedulerConfig(**defaults)
+        if maintenance is True:
+            maintenance = db.maintenance(namespace)
+        if maintenance is not None and hasattr(maintenance, "step"):
+            maintenance = maintenance.step
         self.scheduler = ContinuousScheduler(
             self._execute,
             stage=self._stage if stage else None,
             cfg=cfg,
-            acct_of=lambda results: results[0].batch if results else None)
+            acct_of=lambda results: results[0].batch if results else None,
+            maintenance=maintenance,
+            maintenance_every=maintenance_every)
 
     # scheduler surface, re-exported for callers
     @property

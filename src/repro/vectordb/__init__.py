@@ -4,6 +4,7 @@ from .database import DSQResult, DirectoryVectorDB
 from .flat import FlatExecutor
 from .graph import PGIndex
 from .ivf import IVFIndex
+from .maintenance import MaintenanceManager, MaintenancePolicy
 from .planner import (BatchAccounting, BatchPlanner, PlanGroup, ScopeKey,
                       ScopeMaskCache, device_popcount)
 from .sharded import ShardedExecutor
@@ -14,4 +15,4 @@ __all__ = ["DirectoryVectorDB", "DSQResult", "FlatExecutor", "PGIndex",
            "PlanGroup", "ScopeKey", "ScopeMaskCache", "device_popcount",
            "ShardedExecutor", "ShardedStoreView", "pack_ids_to_words",
            "CalibrationArtifact", "CostModel", "HEURISTIC", "model_of",
-           "resolve_calibration"]
+           "resolve_calibration", "MaintenanceManager", "MaintenancePolicy"]

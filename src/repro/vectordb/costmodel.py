@@ -290,6 +290,26 @@ class CostModel:
                 "max_wait_ms": float(sched["max_wait_ms"]),
                 "adaptive": True}
 
+    # ----------------------------------------------------------- maintenance
+    def compact_ns(self, n: int, dim: int = 64) -> float:
+        """Predicted ns of one store compaction over ``n`` rows: slide the
+        fp32 rows and code slabs in host RAM (~row bytes moved twice) plus
+        the device re-upload of the compacted rows."""
+        return 3.0 * self.scan_ns(n, "fp32", dim)
+
+    def repartition_ns(self, n: int, dim: int = 64,
+                       n_iters: int = 10) -> float:
+        """Predicted ns of one IVF repartition over ``n`` rows: ``n_iters``
+        Lloyd sweeps over the training sample plus one full re-assignment —
+        every stage streams the fp32 rows, so it prices as scans."""
+        return (n_iters + 2.0) * self.scan_ns(n, "fp32", dim)
+
+    def pg_repair_ns(self, n: int, damaged: int, ef: int = 32,
+                     dim: int = 64) -> float:
+        """Predicted ns of one PG repair pass: an O(n) adjacency audit plus
+        one beam search (~``ef`` gathers) per damaged node re-link."""
+        return self.scan_ns(n, "fp32", dim) + damaged * self.gather_ns(ef, dim)
+
     # ---------------------------------------------------------- observability
     def estimate_batch_ns(self, groups: Sequence[Tuple[str, str, int, int]],
                           n: int, k: int, rescore_k: Optional[int],

@@ -672,6 +672,26 @@ class DirectoryVectorDB:
             r.ann_ns = ann_share
         return out
 
+    # ---------------------------------------------------------- maintenance
+    def maintenance(self, namespace: str = DEFAULT_NS,
+                    policy=None) -> "MaintenanceManager":
+        """Per-namespace-journal :class:`~repro.vectordb.maintenance
+        .MaintenanceManager` (created on first access). Constructing it also
+        wires its :meth:`replay` hook into the namespace's DSM executor, so
+        call this *before* :meth:`recover` on restart — otherwise crashed
+        ``maint_*`` suspects are dropped (harmless: the next due check
+        re-triggers them) instead of rolled forward."""
+        if not hasattr(self, "_maintenance"):
+            self._maintenance: Dict[str, object] = {}
+        mgr = self._maintenance.get(namespace)
+        if mgr is None or (policy is not None and mgr.policy is not policy):
+            from .maintenance import MaintenanceManager
+            self.namespace(namespace)
+            mgr = MaintenanceManager(self, namespace=namespace, policy=policy)
+            self._maintenance[namespace] = mgr
+            self._dsm[namespace].maintenance_replay = mgr.replay
+        return mgr
+
     # ------------------------------------------------------------------ DSM
     def move(self, src: str, new_parent: str, namespace: str = DEFAULT_NS,
              stats: Optional[DSMStats] = None) -> None:

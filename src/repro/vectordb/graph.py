@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import functools
 import heapq
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -34,6 +34,12 @@ class PGIndex:
         # allocation per call would make construction quadratic)
         self._visit_gen = np.zeros(n, dtype=np.int64)
         self._gen = 0
+        # bumped by every completed repair() — the maintenance journal's
+        # idempotence probe (did the crashed repair finish its relink pass?)
+        self.repair_gen = 0
+        # damage found by a budgeted repair() but deferred past its
+        # max_relink slice; drained (ascending id order) by later slices
+        self._pending_relink: List[int] = []
         self._build()
         # deterministic search entry (the node nearest the dataset centroid):
         # a fixed, central entry makes looped and batched searches identical
@@ -92,7 +98,8 @@ class PGIndex:
             links = cand[: self.max_degree]
             for nb in links:
                 self._connect(idx, int(nb))
-                self._connect(int(nb), idx)
+            if self._n_edges[idx] == 0 and len(links):
+                self._force_link(idx, int(links[0]))
             inserted.append(idx)
 
     # ------------------------------------------------------ incremental add
@@ -132,26 +139,244 @@ class PGIndex:
                                  ef=self.ef_construction)
             for nb in cand[: self.max_degree]:
                 self._connect(idx, int(nb))
-                self._connect(int(nb), idx)
+            if self._n_edges[idx] == 0 and len(cand):
+                self._force_link(idx, int(cand[0]))
             self._n_nodes += 1
 
     def _connect(self, a: int, b: int) -> None:
+        """Link ``a <-> b`` as a symmetric pair, pruning each full row to its
+        ``max_degree`` closest links. The adjacency is kept an *undirected*
+        invariant: a neighbor pruned out of one row loses its reverse edge
+        too, and the new edge survives only if it makes both rows. The old
+        one-sided prune left the dropped neighbor's edge in place — under
+        heavy ``add`` churn those one-way edges accumulate until beam
+        traversal keeps walking into rows that no longer reciprocate
+        (audited by :meth:`audit`, pinned by the directed-edge-symmetry
+        property test)."""
         if a == b:
             return
+        kept_a, dropped_a = self._prune_into(a, b)
+        if not kept_a:
+            # b never made a's row: no edge forms; only a's pruned old
+            # neighbors (never b, it was rejected on entry) lose reverses
+            for d in dropped_a:
+                self._drop_edge(d, a)
+            return
+        kept_b, dropped_b = self._prune_into(b, a)
+        if not kept_b:
+            self._drop_edge(a, b)
+        for d in dropped_a:
+            self._drop_edge(d, a)
+        for d in dropped_b:
+            self._drop_edge(d, b)
+
+    def _prune_into(self, a: int, b: int) -> Tuple[bool, Tuple[int, ...]]:
+        """Insert ``b`` into ``a``'s row, pruning to the ``max_degree``
+        closest. Returns ``(b_kept, dropped_old_neighbors)`` — the caller
+        removes the dropped neighbors' reverse edges."""
         ne = self._n_edges[a]
         row = self.neighbors[a]
         if b in row[:ne]:
-            return
+            return True, ()
         if ne < self.max_degree:
             row[ne] = b
             self._n_edges[a] = ne + 1
-            return
-        # prune: keep the max_degree closest links
+            return True, ()
         cand = np.concatenate([row[:ne], [b]])
         d = self._distances(self.store.vectors[a], cand)
-        keep = cand[np.argsort(d)[: self.max_degree]]
+        keep = cand[np.argsort(d, kind="stable")[: self.max_degree]]
         self.neighbors[a, : len(keep)] = keep
+        self.neighbors[a, len(keep):] = -1
         self._n_edges[a] = len(keep)
+        keep_set = set(int(x) for x in keep)
+        dropped = tuple(int(x) for x in cand[:ne] if int(x) not in keep_set)
+        return b in keep_set, dropped
+
+    def _drop_edge(self, u: int, v: int) -> None:
+        """Remove the directed edge ``u -> v`` if present (order-preserving
+        row compaction)."""
+        ne = self._n_edges[u]
+        row = self.neighbors[u]
+        pos = np.nonzero(row[:ne] == v)[0]
+        if pos.size == 0:
+            return
+        p = int(pos[0])
+        row[p: ne - 1] = row[p + 1: ne]
+        row[ne - 1] = -1
+        self._n_edges[u] = ne - 1
+
+    def _force_link(self, a: int, b: int) -> None:
+        """Minimum-connectivity fallback: guarantee the edge ``a <-> b``
+        even when ``b``'s row is full and rejects ``a`` under distance
+        pruning, by evicting ``b``'s farthest neighbor (reverse edge
+        dropped too — symmetry holds). Without this a node whose every
+        candidate neighbor prunes it away is left with zero edges:
+        unreachable, silently invisible to every beam search."""
+        if a == b or self._n_edges[a] >= self.max_degree:
+            return
+        ne = self._n_edges[b]
+        row = self.neighbors[b]
+        if a in row[:ne]:
+            return
+        if ne >= self.max_degree:
+            d = self._distances(self.store.vectors[b], row[:ne])
+            evict = int(row[int(np.argmax(d))])
+            self._drop_edge(b, evict)
+            self._drop_edge(evict, b)
+            ne = self._n_edges[b]
+        row[ne] = a
+        self._n_edges[b] = ne + 1
+        ra = self.neighbors[a]
+        ra[self._n_edges[a]] = b
+        self._n_edges[a] += 1
+
+    # ------------------------------------------------------------ maintenance
+    def audit(self) -> dict:
+        """Edge-health census: directed edges whose reverse is missing
+        (``asymmetric``), edges pointing at tombstoned rows (``dead``), and
+        alive nodes left under half their degree budget (``underfilled``).
+        The repair trigger reads these; the symmetry property test asserts
+        ``asymmetric == 0`` after arbitrary add churn."""
+        n = self._n_nodes
+        alive = self.store.alive_bool()
+        asym = dead = edges = underfilled = 0
+        for a in range(n):
+            row = self.neighbors[a][: self._n_edges[a]]
+            edges += len(row)
+            if alive is not None and not alive[a]:
+                continue
+            for b in row.tolist():
+                if alive is not None and not alive[b]:
+                    dead += 1
+                elif a not in self.neighbors[b][: self._n_edges[b]]:
+                    asym += 1
+            live = (len(row) if alive is None
+                    else int(np.count_nonzero(alive[row])))
+            if live < self.max_degree // 2:
+                underfilled += 1
+        return {"nodes": n, "edges": edges, "asymmetric": asym,
+                "dead": dead, "underfilled": underfilled}
+
+    def repair(self, max_relink: Optional[int] = None) -> dict:
+        """Neighborhood repair: drop edges into tombstoned rows (and any
+        one-way edges from graphs built before the symmetric prune), then
+        re-link every node the drop pass damaged — a fresh beam from the
+        entry point reconnects it through alive neighborhoods, exactly like
+        an insert. ``max_relink`` bounds the relink pass (the expensive
+        part — one beam per damaged node) so a serving-slot repair is a
+        bounded unit of work; ``remaining_damage`` in the result tells the
+        caller to schedule another slice (damaged nodes are relinked in
+        ascending id order, so slices are deterministic). Deterministic
+        given (store/graph state, max_relink), so a crashed repair replays
+        to the identical graph. Returns drop/relink counters; bumps
+        :attr:`repair_gen` on completion of each slice."""
+        n = self._n_nodes
+        alive = self.store.alive_bool()
+        cap = self.neighbors.shape[0]
+        deg = self.max_degree
+        in_row = np.arange(deg)[None, :] < self._n_edges[:, None]
+        dropped = 0
+        if alive is None:
+            damaged = np.nonzero(self._n_edges[:n] == 0)[0].tolist()
+        else:
+            # vectorized drop pass: one packed rewrite of every adjacency
+            # row (a per-node Python loop here would dominate the serving
+            # slot at graph scale)
+            arow = np.zeros(cap, dtype=bool)
+            m = min(cap, len(alive))
+            arow[:m] = alive[:m]
+            safe = np.where(in_row, self.neighbors, 0).astype(np.int64)
+            valid = in_row & arow[safe]
+            valid[~arow] = False          # tombstoned node: disconnect
+            order = np.argsort(~valid, axis=1, kind="stable")
+            packed = np.take_along_axis(self.neighbors, order, axis=1)
+            new_edges = valid.sum(axis=1).astype(np.int32)
+            packed[np.arange(deg)[None, :] >= new_edges[:, None]] = -1
+            dropped = int(in_row.sum() - valid.sum())
+            changed = (new_edges != self._n_edges) | (new_edges == 0)
+            self.neighbors = packed
+            self._n_edges = new_edges
+            damaged = np.nonzero(changed[:n] & arow[:n])[0].tolist()
+        # asymmetry heal: re-reciprocate surviving one-way edges. The
+        # membership test is vectorized over the whole directed edge set
+        # (key = a * cap + b, reverse presence via np.isin) — a Python
+        # per-edge `in` scan here would dominate the serving slot.
+        healed = 0
+        idx = np.nonzero(np.arange(deg)[None, :] < self._n_edges[:, None])
+        if len(idx[0]):
+            src = idx[0].astype(np.int64)
+            dst = self.neighbors[idx].astype(np.int64)
+            keys = src * cap + dst
+            missing = ~np.isin(dst * cap + src, keys)
+            for a, b in zip(src[missing].tolist(), dst[missing].tolist()):
+                self._connect(int(a), int(b))
+                healed += 1
+        # entry must be alive or every search starts in a disconnected
+        # tombstone; re-seed at the alive node nearest the alive centroid
+        if n and alive is not None and not alive[self._entry]:
+            ids = np.nonzero(alive[:n])[0]
+            if len(ids):
+                mu = self.store.vectors[ids].mean(axis=0)
+                self._entry = int(ids[np.argmin(self._distances(mu, ids))])
+        relinked = 0
+        merged = sorted(set(self._pending_relink) | set(damaged))
+        todo = merged if max_relink is None else merged[:max_relink]
+        for a in todo:
+            if self._n_nodes <= 1:
+                break
+            if alive is not None and (a >= len(alive) or not alive[a]):
+                continue                  # deferred node tombstoned since
+            cand, _ = self._beam(self.store.vectors[a], entry=self._entry,
+                                 ef=self.ef_construction,
+                                 valid_mask=alive)
+            for nb in cand[: self.max_degree]:
+                if int(nb) != a:
+                    self._connect(a, int(nb))
+            if self._n_edges[a] == 0:
+                for nb in cand:
+                    if int(nb) != a:
+                        self._force_link(a, int(nb))
+                        break
+            relinked += 1
+        self._pending_relink = [] if max_relink is None \
+            else merged[max_relink:]
+        self.repair_gen += 1
+        return {"dropped_edges": dropped, "relinked_nodes": relinked,
+                "healed_edges": healed,
+                "remaining_damage": len(self._pending_relink)}
+
+    def remap_ids(self, mapping) -> None:
+        """Order-preserving id compaction: rewrite rows/edges into the new
+        id space; tombstoned neighbors (mapped to -1) drop out of rows,
+        tombstoned nodes drop out of the graph."""
+        m = np.asarray(mapping, dtype=np.int64)
+        old_n = min(self._n_nodes, len(m))
+        cap = self.neighbors.shape[0]
+        out = np.full((cap, self.max_degree), -1, dtype=np.int32)
+        n_edges = np.zeros(cap, dtype=np.int32)
+        for a in range(old_n):
+            na = m[a]
+            if na < 0:
+                continue
+            row = self.neighbors[a][: self._n_edges[a]]
+            row = m[row]
+            row = row[row >= 0]
+            out[na, : len(row)] = row
+            n_edges[na] = len(row)
+        self.neighbors = out
+        self._n_edges = n_edges
+        self._n_nodes = int(np.count_nonzero(m >= 0))
+        self._pending_relink = sorted(
+            int(m[a]) for a in self._pending_relink
+            if a < len(m) and m[a] >= 0)
+        self._visit_gen = np.zeros(cap, dtype=np.int64)
+        self._gen = 0
+        if self._entry < len(m) and m[self._entry] >= 0:
+            self._entry = int(m[self._entry])
+        elif self._n_nodes:
+            mu = self.store.vectors.mean(axis=0)
+            ids = np.arange(self._n_nodes, dtype=np.int64)
+            self._entry = int(np.argmin(self._distances(mu, ids)))
 
     # ----------------------------------------------------------------- search
     def _beam(self, q: np.ndarray, entry: int, ef: int,

@@ -247,6 +247,9 @@ class IVFIndex:
         self.assign = assign
         self._layout: Optional[CSRLayout] = None
         self._centers_dev: Optional[jnp.ndarray] = None
+        # bumped by every completed repartition(); the maintenance journal's
+        # idempotence probe on crash replay
+        self.repartition_gen = 0
 
     @property
     def lists(self) -> List[np.ndarray]:
@@ -297,6 +300,108 @@ class IVFIndex:
 
     def nbytes(self) -> int:
         return self.centers.nbytes + sum(d.nbytes for d in self._data)
+
+    # ------------------------------------------------------------ maintenance
+    def pad_waste(self) -> int:
+        """Padding slots the current partition occupancy forces into the CSR
+        layout (sum of TILE-aligned region lengths minus live list lengths).
+        Grows under churn: tombstoned members keep their slots and drifted
+        ingest piles into a few hot lists, whose ragged tails all round up."""
+        aligned = ((self._len + TILE - 1) // TILE) * TILE
+        return int(aligned.sum() - self._len.sum())
+
+    def partition_stats(self) -> dict:
+        """Occupancy summary for the maintenance planner's drift detector."""
+        lens = self._len
+        aligned = ((lens + TILE - 1) // TILE) * TILE
+        return {
+            "n_lists": self.n_lists,
+            "pad_waste": int(aligned.sum() - lens.sum()),
+            "max_len": int(lens.max()) if self.n_lists else 0,
+            "mean_len": float(lens.mean()) if self.n_lists else 0.0,
+            "max_aligned": int(aligned.max()) if self.n_lists else 0,
+        }
+
+    def _current_assign(self, n: int) -> np.ndarray:
+        """Per-row partition of record, derived from the member lists (the
+        ``assign`` array goes stale after :meth:`add`)."""
+        cur = np.full(n, -1, dtype=np.int64)
+        for c in range(self.n_lists):
+            cur[self._data[c][: int(self._len[c])].astype(np.int64)] = c
+        return cur
+
+    def repartition(self, seed: int = 0, n_iters: int = 10,
+                    sample: Optional[int] = None) -> dict:
+        """Retrain centroids on a seeded sample of the *alive* rows, re-assign
+        every row, and rebuild the member lists aside before one atomic
+        attribute swap (readers see either the old partitioning or the new,
+        never a mix). Tombstoned rows are dropped from the rebuilt lists, so
+        repartitioning also reclaims their CSR slots. Deterministic for a
+        fixed (store contents, seed, n_iters, sample) — crash replay re-runs
+        it bit-identically."""
+        n = len(self.store)
+        waste_before = self.pad_waste()
+        if n == 0:
+            self.repartition_gen += 1
+            return {"gen": self.repartition_gen, "moved": 0,
+                    "pad_waste_before": waste_before, "pad_waste_after": 0}
+        data = self.store.vectors
+        alive = self.store.alive_bool()
+        pool = np.nonzero(alive)[0] if alive is not None else np.arange(n)
+        rng = np.random.default_rng(seed)
+        if sample is not None and 0 < sample < len(pool):
+            pool = np.sort(pool[rng.choice(len(pool), size=sample,
+                                           replace=False)])
+        centers = self.centers
+        if len(pool):
+            centers = np.asarray(_lloyd(jnp.asarray(data[pool]),
+                                        jnp.asarray(self.centers), n_iters))
+        assign = np.asarray(_assign(jnp.asarray(data), jnp.asarray(centers)))
+        old_assign = self._current_assign(n)
+        # rebuild member lists aside: alive rows only, ascending id per list
+        keep = np.ones(n, dtype=bool) if alive is None else alive
+        order = np.argsort(assign, kind="stable")
+        order = order[keep[order]]
+        counts = np.bincount(assign[keep], minlength=self.n_lists)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        sorted_ids = order.astype(np.uint32)
+        new_data: List[np.ndarray] = []
+        new_len = np.zeros(self.n_lists, dtype=np.int64)
+        for c in range(self.n_lists):
+            members = sorted_ids[starts[c]: starts[c + 1]]
+            arr = np.empty(max(8, len(members)), dtype=np.uint32)
+            arr[: len(members)] = members
+            new_data.append(arr)
+            new_len[c] = len(members)
+        moved = int(np.sum((old_assign >= 0) & keep & (old_assign != assign)))
+        self.centers = centers
+        self._data = new_data
+        self._len = new_len
+        self.assign = assign
+        self._layout = None
+        self._centers_dev = None
+        self.repartition_gen += 1
+        return {"gen": self.repartition_gen, "moved": moved,
+                "pad_waste_before": waste_before,
+                "pad_waste_after": self.pad_waste()}
+
+    def remap_ids(self, mapping) -> None:
+        """Rewrite member ids through a store-compaction ``mapping`` (old row
+        -> new row, -1 = reclaimed). Centers are untouched — compaction moves
+        encodings, not vectors — and dropped rows leave their lists, so the
+        rebuilt CSR sheds their padding."""
+        m = np.asarray(mapping, dtype=np.int64)
+        for c in range(self.n_lists):
+            ln = int(self._len[c])
+            members = m[self._data[c][:ln].astype(np.int64)]
+            members = members[members >= 0].astype(np.uint32)
+            arr = np.empty(max(8, len(members)), dtype=np.uint32)
+            arr[: len(members)] = members
+            self._data[c] = arr
+            self._len[c] = len(members)
+        new_n = int(np.sum(m >= 0))
+        self.assign = self._current_assign(new_n)
+        self._layout = None
 
     # ----------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,

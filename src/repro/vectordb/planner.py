@@ -229,6 +229,23 @@ class ScopeMaskCache:
             self.delta_evictions += len(evict)
             return {"patched": len(patch), "evicted": len(evict)}
 
+    def apply_remap(self, mapping, new_n: int) -> int:
+        """Store-compaction id remap: rewrite every resident entry's member
+        ids through ``mapping`` (old row -> new row, -1 = reclaimed) and
+        re-stamp it for the compacted store size. Directory membership did
+        not change — the scope-epoch contract deliberately skips the bump —
+        so the tokens are carried over unchanged and the entries stay live;
+        only the lazily-materialized id/word/bool forms are dropped (the word
+        count itself changed). Returns the number of entries patched."""
+        with self._lock:
+            for key, ent in list(self._entries.items()):
+                scope = ScopeIndex._remap_bitmap(ent.scope, mapping)
+                self._entries[key] = CachedScope(
+                    tokens=ent.tokens, n=new_n, scope_size=len(scope),
+                    scope=scope)
+            self.patched += len(self._entries)
+            return len(self._entries)
+
     def revalidate(self, index: ScopeIndex, n: int) -> Tuple[int, int]:
         """(still-valid, total) over the resident entries, without evicting —
         the cache-survival metric of the DSM benchmarks."""

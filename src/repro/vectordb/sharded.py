@@ -270,6 +270,43 @@ class ShardedExecutor:
                 self._free.append(si.slot)
                 self.masks_evicted += 1
 
+    def apply_remap(self, mapping) -> int:
+        """Store-compaction id remap: re-mirror the compacted rows at the
+        *unchanged* shard capacity (``ShardedStoreView.apply_remap`` — no
+        re-shard, so the table's word layout survives) and rewrite every
+        pinned slot's packed words through ``mapping`` instead of evicting.
+        Tokens carry over — compaction moves id encodings, not directory
+        membership, and the paired ``ScopeMaskCache.apply_remap`` advances
+        the host cache the same way, so slot hits keep validating. Returns
+        the number of slots patched."""
+        self.view.apply_remap()
+        m = np.asarray(mapping, dtype=np.int64)
+        old_n = len(m)
+        alive_old = np.nonzero(m >= 0)[0]
+        new_n = len(alive_old)
+        with self._lock:
+            if self._table is None or not self._slots:
+                return 0
+            W = self._host_table.shape[1]
+            patched = 0
+            for _, si in self._slots.items():
+                row = self._host_table[si.slot]
+                bits = np.unpackbits(row.view(np.uint8),
+                                     bitorder="little")[:old_n]
+                new_bits = np.zeros(W * 32, dtype=np.uint8)
+                new_bits[m[alive_old]] = bits[alive_old]
+                new_row = np.packbits(new_bits,
+                                      bitorder="little").view(np.uint32)
+                self._host_table[si.slot] = new_row
+                # copying functional update, NOT the donated scatter: the
+                # maintenance thread patches while serving may be mid-launch
+                self._table = self._table.at[si.slot].set(jnp.asarray(new_row))
+                si.n = new_n
+                self.mask_bytes_patched += new_row.nbytes
+                patched += 1
+            self.masks_patched += patched
+            return patched
+
     # --------------------------------------------------------------- queries
     def phase_depth(self, k: int, precision: str = "fp32",
                     rescore_k: Optional[int] = None) -> int:

@@ -136,10 +136,22 @@ class VectorStore:
         self._deleted = np.zeros(capacity, dtype=bool)
         self._n_deleted = 0
         self._alive_words: Optional[np.ndarray] = None
-        # append-only tombstone id log: incremental consumers (the sharded
-        # view's alive mask) patch only the words these ids touch instead of
-        # rebuilding/re-uploading the whole mask per delete
+        # Tombstone id log: incremental consumers (the sharded view's alive
+        # mask, the maintenance manager) patch only the words these ids
+        # touch instead of rebuilding/re-uploading the whole mask per
+        # delete. The log is *bounded*: consumers register a cursor and the
+        # prefix every registered cursor has passed is dropped
+        # (``_deleted_log_base`` tracks the absolute index of element 0, so
+        # cursors survive truncation without rebasing each consumer). With
+        # no registered consumers the log is kept whole — legacy readers of
+        # ``deleted_log`` see the full history.
         self._deleted_log: list = []
+        self._deleted_log_base = 0
+        self._log_cursors: dict = {}      # consumer handle -> absolute cursor
+        self._next_log_consumer = 0
+        # bumped by every completed compact() — the maintenance journal's
+        # idempotence probe (was the crashed compaction's swap reached?)
+        self.compact_gen = 0
 
     def __len__(self) -> int:
         return self._n
@@ -194,8 +206,52 @@ class VectorStore:
 
     @property
     def deleted_log(self) -> list:
-        """Append-only log of tombstoned ids (in mark order)."""
+        """Tombstoned ids (in mark order) not yet truncated; prefer the
+        cursor API (:meth:`register_log_consumer`) which bounds the log."""
         return self._deleted_log
+
+    @property
+    def deleted_log_end(self) -> int:
+        """Absolute length of the tombstone history (survives truncation)."""
+        return self._deleted_log_base + len(self._deleted_log)
+
+    def register_log_consumer(self) -> int:
+        """Register an incremental tombstone-log consumer. The returned
+        handle's cursor starts at the current end (a new consumer builds
+        its first snapshot from authoritative store state, then follows the
+        log). Registration is what lets the store drop consumed history."""
+        h = self._next_log_consumer
+        self._next_log_consumer += 1
+        self._log_cursors[h] = self.deleted_log_end
+        return h
+
+    def unregister_log_consumer(self, handle: int) -> None:
+        self._log_cursors.pop(handle, None)
+        self._truncate_deleted_log()
+
+    def log_consumer_reset(self, handle: int) -> None:
+        """Skip the handle to the log end without reading (the consumer just
+        rebuilt from scratch, e.g. a capacity re-shard)."""
+        self._log_cursors[handle] = self.deleted_log_end
+        self._truncate_deleted_log()
+
+    def consume_deleted_log(self, handle: int) -> list:
+        """Tombstone ids appended since this handle's cursor; advances the
+        cursor to the end and drops any prefix every consumer has passed."""
+        start = max(0, self._log_cursors[handle] - self._deleted_log_base)
+        out = self._deleted_log[start:]
+        self._log_cursors[handle] = self.deleted_log_end
+        self._truncate_deleted_log()
+        return out
+
+    def _truncate_deleted_log(self) -> None:
+        if not self._log_cursors:
+            return
+        low = min(self._log_cursors.values())
+        drop = low - self._deleted_log_base
+        if drop > 0:
+            del self._deleted_log[:drop]
+            self._deleted_log_base = low
 
     def deleted_mask(self) -> np.ndarray:
         return self._deleted[: self._n]
@@ -219,6 +275,69 @@ class VectorStore:
             self._alive_words = np.packbits(
                 padded, bitorder="little").view(np.uint32)
         return self._alive_words
+
+    # ----------------------------------------------------------- compaction
+    def compact(self) -> Optional[np.ndarray]:
+        """Reclaim tombstoned rows: slide every alive row down (order
+        preserved), clear the tombstone set, and re-pack the int8/PQ code
+        slabs for the compacted id space (codes are copied, never
+        re-encoded — the quantized mirrors stay bit-identical for surviving
+        rows; the frozen PQ codebook is untouched).
+
+        Returns the id remap ``mapping[old_id] -> new_id`` (int64, -1 for
+        reclaimed rows), or ``None`` when there was nothing to reclaim. The
+        caller owns propagating the remap to every id-keyed structure
+        (scope indexes, ANN lists/graphs, mask caches, sharded mirrors) —
+        see ``maintenance.MaintenanceManager``."""
+        if self._n_deleted == 0:
+            return None
+        old_n = self._n
+        alive = ~self._deleted[:old_n]
+        new_n = int(np.count_nonzero(alive))
+        mapping = np.full(old_n, -1, dtype=np.int64)
+        mapping[alive] = np.arange(new_n, dtype=np.int64)
+        self._rows[:new_n] = self._rows[:old_n][alive]
+        # int8 mirror: compact the encoded prefix; the watermark moves to
+        # however many of those encoded rows survived (order-preserving, so
+        # the encoded prefix stays a prefix)
+        if self._q_rows is not None:
+            q_n = min(self._q_n, old_n)
+            keep = alive[:q_n]
+            new_q = int(np.count_nonzero(keep))
+            self._q_rows[:new_q] = self._q_rows[:q_n][keep]
+            self._q_scale[:new_q] = self._q_scale[:q_n][keep]
+            self._q_n = new_q
+        if self._pq_codes is not None:
+            pq_n = min(self._pq_n, old_n)
+            keep = alive[:pq_n]
+            new_pq = int(np.count_nonzero(keep))
+            self._pq_codes[:new_pq] = self._pq_codes[:pq_n][keep]
+            self._pq_n = new_pq
+        if self._pinned is not None:
+            pinned = np.zeros(self._pinned.shape[0], dtype=bool)
+            pinned[:new_n] = self._pinned[:old_n][alive]
+            self._pinned = pinned
+        self._n = new_n
+        self._deleted[:old_n] = False
+        self._n_deleted = 0
+        # every tombstone in the log is now reclaimed; consumers rebuild
+        # their masks from the remap, not the log
+        self._deleted_log.clear()
+        self._deleted_log_base = 0
+        for h in self._log_cursors:
+            self._log_cursors[h] = 0
+        # host/device caches of the old id space
+        self._device_cache = None
+        self._norms_cache = None
+        self._device_norms = None
+        self._alive_words = None
+        self._q_norms_cache = None
+        self._device_q = None
+        self._device_q_scale = None
+        self._device_q_norms = None
+        self._device_pq = None
+        self.compact_gen += 1
+        return mapping
 
     def device_vectors(self) -> jnp.ndarray:
         if self._device_cache is None or self._device_cache.shape[0] != self._n:
@@ -447,7 +566,11 @@ class ShardedStoreView:
         self._alive = None               # device packed alive∧in-range words
         self._alive_host = None          # host mirror of the same words
         self._alive_n = 0                # rows covered by the mirror
-        self._alive_cursor = 0           # consumed prefix of the tombstone log
+        # registered tombstone-log cursor: consuming through the store API
+        # (instead of indexing the raw list) is what lets the store drop
+        # the consumed prefix instead of holding O(delete-history) forever
+        self._log_consumer = store.register_log_consumer()
+        self._compact_gen = store.compact_gen
         # int8 tier mirror (codes + per-row scales), built lazily on the
         # first quantized scan and then maintained through the same
         # incremental-scatter / capacity-re-shard policy as the fp32 rows
@@ -489,6 +612,12 @@ class ShardedStoreView:
         padded capacity changed (a full re-shard: device-resident masks
         derived from the old capacity are invalid and must be rebuilt)."""
         n = len(self.store)
+        if self._compact_gen != self.store.compact_gen:
+            # the store compacted underneath us without apply_remap (no
+            # maintenance manager attached): every mirror row moved, so
+            # force the full-rebuild path below
+            self._compact_gen = self.store.compact_gen
+            self._db = None
         if self._db is None or n > self._cap:
             cap = max(self._cap, self.row_align)
             while cap < n:
@@ -577,6 +706,26 @@ class ShardedStoreView:
             self._pq_synced = n
         return self._pqdb
 
+    def apply_remap(self) -> None:
+        """Rebuild the row mirrors for a just-compacted store at the SAME
+        padded capacity. Deliberately not a re-shard: the device mask
+        table's word layout (``cap/32`` words per scope) survives, which is
+        what lets :meth:`ShardedExecutor.apply_remap` *patch* its cached
+        scope rows through the id remap instead of evicting every slot."""
+        self._compact_gen = self.store.compact_gen
+        if self._db is None:
+            return
+        n = len(self.store)
+        host = np.zeros((self._cap, self.store.dim), dtype=np.float32)
+        host[:n] = self.store.vectors
+        self._db = jax.device_put(host, self._sharding(self.axes, None))
+        self.db_bytes_uploaded += host.nbytes
+        self._synced = n
+        self._alive = None              # rebuilt from store state next read
+        self._qdb = None
+        self._pqdb = None
+        self.store.log_consumer_reset(self._log_consumer)
+
     def _patch_alive_range(self, w_lo: int, w_hi: int) -> None:
         """Recompute words [w_lo, w_hi) from authoritative store state and
         scatter only that range to the device (power-of-two padded width)."""
@@ -601,7 +750,6 @@ class ShardedStoreView:
         store's tombstone log) patch only the word ranges they touch; a full
         rebuild happens only on a capacity re-shard."""
         n = len(self.store)
-        log = self.store.deleted_log
         if self._alive is None:
             padded = np.zeros(self._cap, dtype=bool)
             ab = self.store.alive_bool()
@@ -611,18 +759,17 @@ class ShardedStoreView:
             self._alive = jax.device_put(host, self._sharding(self.axes))
             self.alive_bytes_uploaded += host.nbytes
             self._alive_n = n
-            self._alive_cursor = len(log)
+            self.store.log_consumer_reset(self._log_consumer)
             return self._alive
         dirty: Optional[Tuple[int, int]] = None
         if n > self._alive_n:
             dirty = (self._alive_n >> 5, ((n - 1) >> 5) + 1)
             self._alive_n = n
-        if len(log) > self._alive_cursor:
-            fresh = log[self._alive_cursor:]
+        fresh = self.store.consume_deleted_log(self._log_consumer)
+        if fresh:
             lo, hi = min(fresh) >> 5, (max(fresh) >> 5) + 1
             dirty = ((min(dirty[0], lo), max(dirty[1], hi))
                      if dirty else (lo, hi))
-            self._alive_cursor = len(log)
         if dirty is not None:
             self._patch_alive_range(*dirty)
         return self._alive

@@ -30,7 +30,7 @@ import pytest
 
 from repro.core import DSM, STRATEGIES
 from repro.core import paths as P
-from repro.vectordb import DirectoryVectorDB
+from repro.vectordb import DirectoryVectorDB, MaintenancePolicy
 
 DIM = 16
 K = 5
@@ -129,6 +129,12 @@ class FuzzState:
                 dim=DIM, scope_strategy=strat,
                 journal_path=os.path.join(tmpdir, f"journal.{strat}"))
         self.alive: List[int] = []
+        # one shared policy object so db.maintenance() reuses its manager;
+        # low thresholds make every op kind reachable at fuzz scale
+        self._maint_policy = MaintenancePolicy(
+            tombstone_min=8, tombstone_fraction=0.05,
+            pad_waste_min=32, pad_waste_fraction=0.10,
+            repair_deletes=4, n_iters=2, sample=64)
 
     # -- helpers ----------------------------------------------------------
     def _dirs(self, non_root=False) -> List[Tuple[str, ...]]:
@@ -219,6 +225,39 @@ class FuzzState:
             db.delete(eid)
         self.oracle.delete(eid)
         return True
+
+    def op_maintenance(self) -> bool:
+        """Online maintenance differential: every strategy DB saw identical
+        churn, so due() and each journaled op (PG repair, compaction,
+        seeded repartition) must run identically on all three — and the
+        compaction's order-preserving id remap must rekey the oracle to
+        exactly the ids the DBs now return."""
+        first = next(iter(self.dbs.values()))
+        if not first.executors:
+            return False                   # pre-build_ann: nothing to repair
+        n = len(first.store)
+        alive_b = first.store.alive_bool()
+        ran: Optional[List[str]] = None
+        for strat, db in self.dbs.items():
+            mgr = db.maintenance(policy=self._maint_policy)
+            kinds = [r["kind"] for r in mgr.run_all()]
+            assert ran is None or kinds == ran, (strat, kinds, ran)
+            assert mgr.stats()["journal_pending"] == 0, strat
+            ran = kinds
+        if ran and "maint_compact" in ran:
+            # ids are store rows and compaction slides alive rows down in
+            # order, so the mapping is computable from the pre-op alive set
+            alive_rows = (np.nonzero(alive_b)[0] if alive_b is not None
+                          else np.arange(n))
+            mapping = np.full(n, -1, np.int64)
+            mapping[alive_rows] = np.arange(len(alive_rows))
+            self.oracle.entries = {int(mapping[e]): d for e, d
+                                   in self.oracle.entries.items()}
+            self.oracle.vectors = {int(mapping[e]): v for e, v
+                                   in self.oracle.vectors.items()}
+            self.alive = [int(mapping[i]) for i in self.alive]
+            assert all(i >= 0 for i in self.alive)
+        return bool(ran)
 
     def op_crash_recover(self) -> None:
         """recover() on a healthy journal must replay nothing and leave
@@ -492,7 +531,8 @@ class FuzzState:
 
 WEIGHTS = [("ingest", 0.22), ("mkdir", 0.12), ("move", 0.14),
            ("merge", 0.10), ("rmdir", 0.07), ("delete", 0.10),
-           ("crash_recover", 0.05), ("noop", 0.20)]
+           ("crash_recover", 0.05), ("maintenance", 0.06),
+           ("noop", 0.14)]
 
 
 def _seed_corpus(state: FuzzState) -> None:
