@@ -18,8 +18,8 @@ def main() -> None:
                     help="fraction of published dataset sizes")
     ap.add_argument("--only", default="",
                     help="comma list: dsq,dsq_batch,ivf_batch,sharded,"
-                         "quantized,pq,serve,autotune,maintenance,e2e,dsm,"
-                         "build,depth,openviking,roofline,kernels")
+                         "quantized,pq,serve,autotune,maintenance,faults,"
+                         "e2e,dsm,build,depth,openviking,roofline,kernels")
     ap.add_argument("--json", default="",
                     help="also write {section: rows} to this JSON file")
     args = ap.parse_args()
@@ -27,9 +27,10 @@ def main() -> None:
 
     from . import (bench_autotune, bench_build, bench_depth, bench_dsm,
                    bench_dsq_batch, bench_dsq_e2e, bench_dsq_latency,
-                   bench_ivf_batch, bench_kernels, bench_maintenance,
-                   bench_openviking, bench_pq, bench_quantized,
-                   bench_roofline, bench_serve, bench_sharded)
+                   bench_faults, bench_ivf_batch, bench_kernels,
+                   bench_maintenance, bench_openviking, bench_pq,
+                   bench_quantized, bench_roofline, bench_serve,
+                   bench_sharded)
     from .common import emit
 
     sections = [
@@ -51,6 +52,8 @@ def main() -> None:
          lambda: bench_autotune.run(args.scale)),
         ("maintenance", "Online maintenance under streaming churn",
          lambda: bench_maintenance.run(args.scale)),
+        ("faults", "Chaos: degraded-mode serving + crash recovery",
+         lambda: bench_faults.run(args.scale)),
         ("e2e", "Fig 7/8: DSQ quality vs latency",
          lambda: bench_dsq_e2e.run(args.scale)),
         ("dsm", "Fig 9: DSM MOVE/MERGE latency",

@@ -367,3 +367,60 @@ print(f"after churn: rows={len(m_db.store)} dead={m_db.store.n_deleted} "
       f"ops={mgr.stats()['ops_run']}")     # bounded rows, zero tombstones
 # a crash mid-op replays from the journal: db.recover() re-runs any
 # uncommitted maintenance intent deterministically (gen-counter idempotent)
+
+# --- fault injection + graceful degradation: serve through failures ---------
+# Every I/O and thread boundary in the stack calls faults.fire("<seam>") —
+# free when no injector is installed, a deterministic seeded fault schedule
+# under chaos. Three layers answer the faults: (1) bounded retry — transient
+# host-fetch faults re-attempt with exponential backoff inside the store,
+# results bit-identical to the fault-free run; (2) a consecutive-failure
+# circuit breaker in the serving front end — repeated executor faults
+# downshift one rung (sharded->flat, fp32->int8 with a recall-clamped
+# rescore window, nprobe/ef_search halved toward their floors) and
+# consecutive clean batches climb back to the healthy config; (3) deadline
+# budgets — a request queued past its deadline_ms is shed with a typed
+# DeadlineExceeded at batch formation instead of occupying a device slot.
+# A dead worker thread flips health to readonly and fails every pending
+# ticket fast (SchedulerUnhealthy) — no caller ever hangs on a dead engine.
+print("\n=== fault injection + graceful degradation ===")
+from repro import faults
+from repro.serving import DeadlineExceeded
+
+exact = db.dsq_batch(queries, scopes, k=3)       # fresh fault-free baseline
+base = db.dsq_batch(queries, scopes, k=3, precision="int8")
+plan = faults.FaultPlan(seed=0).add("store.host_fetch", kind="transient",
+                                    count=2)
+with faults.FaultInjector(plan) as inj:
+    retried = db.dsq_batch(queries, scopes, k=3, precision="int8")
+same = all(np.array_equal(r.ids[0], b.ids[0]) for r, b in zip(retried, base))
+print(f"2 transient host-fetch faults absorbed by bounded retry: "
+      f"bit-identical={same}, trips={inj.trips}, "
+      f"retries counted={retried[0].batch.host_fetch_retries}")
+
+fdsq = ScheduledDSQ(db, k=3, executor="flat", cfg=SchedulerConfig(
+    max_batch=8, max_wait_ms=5.0,
+    breaker_trip_after=2, breaker_reset_after=2))
+with fdsq:
+    with faults.FaultInjector(faults.FaultPlan(seed=0).add(
+            "sched.execute", kind="error", count=2)):
+        for _ in range(2):                 # two failed batches trip breaker
+            try:
+                fdsq.submit(queries[0], scopes[0]).result(timeout=30.0)
+            except faults.FaultError:
+                pass                       # typed — callers see the fault
+    print(f"breaker tripped -> health={fdsq.health}, "
+          f"level={fdsq.degrade_level}, precision={fdsq.precision}")
+    degraded = [fdsq.submit(queries[i], scopes[i]).result(timeout=30.0)
+                for i in range(4)]         # first served on the int8 rung
+    print(f"degraded rung serves: recall@3 vs exact = "
+          f"{recall(exact[:4], degraded):.2f}; after clean batches: "
+          f"health={fdsq.health}, level={fdsq.degrade_level}, "
+          f"precision={fdsq.precision}")
+    try:                                   # exhausted budget -> typed shed
+        fdsq.submit(queries[0], scopes[0], deadline_ms=0.0).result(timeout=30.0)
+    except DeadlineExceeded as e:
+        print(f"deadline shed is typed: {e}")
+snap = fdsq.metrics.snapshot()
+print(f"window: degrades={snap['degrades']}, recoveries={snap['recoveries']}, "
+      f"failed={snap['failed']}, expired={snap['expired']}, "
+      f"shed rate {snap['shed_rate']:.2f}")

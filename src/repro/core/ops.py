@@ -19,6 +19,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .. import faults
 from . import paths as P
 from .idset import RoaringBitmap
 from .interface import DSMStats, ResolveStats, ScopeIndex
@@ -200,13 +201,23 @@ class DSMJournal:
     prevent."""
 
     def __init__(self, path: Optional[str] = None,
-                 auto_compact_every: int = 512):
+                 auto_compact_every: int = 512,
+                 fsync_on_commit: bool = False):
         self.path = path
         self.auto_compact_every = auto_compact_every
+        self.fsync_on_commit = fsync_on_commit
         self._resolved_since_compact = 0
         self._pending: Dict[int, DSM] = {}
         self._seq = 0
         self._lock = threading.Lock()
+        if path:
+            # A crash between writing the compaction tmp and os.replace
+            # leaves a stray sibling behind; the journal itself is still
+            # the authority (the replace never happened), so the tmp is
+            # dead weight — drop it before it can shadow a later compact.
+            for stale in (path + ".compact", path + ".tmp"):
+                if os.path.exists(stale):
+                    os.remove(stale)
         if path and os.path.exists(path):
             valid_bytes = 0
             with open(path, "rb") as f:
@@ -240,9 +251,24 @@ class DSMJournal:
         for rec in recs:
             rec["ts"] = now
         if self.path:
+            payload = "".join(json.dumps(r) + "\n" for r in recs)
+            # Seam: raises ENOSPC/crash before any byte lands (intent lost,
+            # in-memory state untouched by our callers' ordering), or
+            # returns a short_write rule — then a payload *prefix* lands
+            # and the simulated process dies, leaving the torn tail that
+            # reopen-truncation must repair.
+            rule = faults.fire("journal.write")
             with open(self.path, "a") as f:
-                f.write("".join(json.dumps(r) + "\n" for r in recs))
+                if rule is not None and rule.kind == "short_write":
+                    f.write(payload[:max(1, int(len(payload)
+                                               * rule.fraction))])
+                    f.flush()
+                    raise faults.InjectedCrash("journal.write")
+                f.write(payload)
                 f.flush()
+                if self.fsync_on_commit:
+                    faults.fire("journal.fsync")
+                    os.fsync(f.fileno())
 
     def begin(self, op: DSM) -> int:
         return self.begin_many([op])[0]
@@ -320,7 +346,13 @@ class DSMJournal:
                     {"event": "begin", "seq": seq, "kind": op.kind,
                      "src": op.src, "dst": op.dst, "ts": now}) + "\n")
             f.flush()
+        # Kill point: tmp fully written, old journal still authoritative.
+        # A crash here leaves the stray tmp that __init__ cleans on reopen.
+        faults.fire("journal.compact.tmp")
         os.replace(tmp, self.path)
+        # Kill point: replace done — the compacted file IS the journal now;
+        # reopen must recover identically from it.
+        faults.fire("journal.compact.done")
         self._resolved_since_compact = 0
 
     @staticmethod

@@ -1,9 +1,11 @@
 from .rag import ContextDatabase, RAGConfig, RAGServer, RetrievalTicket
-from .scheduler import (AdmissionError, ContinuousScheduler, ScheduledDSQ,
-                        SchedulerConfig, ServingMetrics, ServingTicket,
+from .scheduler import (AdmissionError, CircuitBreaker, ContinuousScheduler,
+                        DeadlineExceeded, ScheduledDSQ, SchedulerConfig,
+                        SchedulerUnhealthy, ServingMetrics, ServingTicket,
                         open_loop_arrivals)
 
 __all__ = ["ContextDatabase", "RAGConfig", "RAGServer", "RetrievalTicket",
-           "AdmissionError", "ContinuousScheduler", "ScheduledDSQ",
-           "SchedulerConfig", "ServingMetrics", "ServingTicket",
+           "AdmissionError", "CircuitBreaker", "ContinuousScheduler",
+           "DeadlineExceeded", "ScheduledDSQ", "SchedulerConfig",
+           "SchedulerUnhealthy", "ServingMetrics", "ServingTicket",
            "open_loop_arrivals"]

@@ -191,17 +191,22 @@ class ContextDatabase:
     def submit_retrieve(self, query_vec: np.ndarray, scope: str,
                         recursive: bool = True, exclude: Sequence[str] = (),
                         tenant: str = "default",
-                        t_arrival: Optional[float] = None
+                        t_arrival: Optional[float] = None,
+                        deadline_ms: Optional[float] = None
                         ) -> "RetrievalTicket":
         """Async submit: admit one retrieval into the scheduler (raises
-        :class:`repro.serving.scheduler.AdmissionError` at queue capacity).
-        ``.result()`` awaits the scheduler-filled batch and returns the same
-        ``(hits, stats)`` pair :meth:`retrieve` would."""
+        :class:`repro.serving.scheduler.AdmissionError` at queue capacity,
+        :class:`repro.serving.scheduler.SchedulerUnhealthy` when a dead
+        worker flipped the scheduler readonly). ``.result()`` awaits the
+        scheduler-filled batch and returns the same ``(hits, stats)`` pair
+        :meth:`retrieve` would; a request still queued past ``deadline_ms``
+        instead raises a typed ``DeadlineExceeded``."""
         if getattr(self, "_serving", None) is None:
             raise RuntimeError("call start_serving(cfg) first")
         ticket = self._serving.submit(query_vec, scope, recursive=recursive,
                                       exclude=exclude, tenant=tenant,
-                                      t_arrival=t_arrival)
+                                      t_arrival=t_arrival,
+                                      deadline_ms=deadline_ms)
         return RetrievalTicket(ticket, self._format_result)
 
     def stop_serving(self) -> None:
@@ -211,11 +216,13 @@ class ContextDatabase:
 
     def serving_stats(self, reset: bool = False) -> Dict[str, object]:
         """Window snapshot of the serving metrics: QPS, p50/p95/p99 latency,
-        batch occupancy, shed rate, merged batch accounting.
-        ``reset=True`` starts the next measurement window."""
+        batch occupancy, shed rate, health state + degrade counters, merged
+        batch accounting. ``reset=True`` starts the next window."""
         if getattr(self, "_serving", None) is None:
             raise RuntimeError("serving not started")
-        return self._serving.metrics.snapshot(reset=reset)
+        out = self._serving.metrics.snapshot(reset=reset)
+        out["degrade_level"] = self._serving.degrade_level
+        return out
 
 
 class RetrievalTicket:
@@ -228,6 +235,12 @@ class RetrievalTicket:
 
     def done(self) -> bool:
         return self._ticket.done()
+
+    def cancel(self) -> bool:
+        """Abandon the retrieval (e.g. after ``result(timeout)`` timed
+        out): its admission-queue slot is reclaimed at the next batch
+        formation instead of leaking."""
+        return self._ticket.cancel()
 
     def result(self, timeout: Optional[float] = None):
         return self._fmt(self._ticket.result(timeout))

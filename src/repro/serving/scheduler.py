@@ -49,6 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import faults
 from ..core.interface import normalize_batch
 from ..vectordb.planner import BatchAccounting, ScopeKey
 
@@ -66,6 +67,76 @@ class AdmissionError(RuntimeError):
         self.capacity = capacity
 
 
+class DeadlineExceeded(RuntimeError):
+    """Typed per-request deadline miss: the request's budget expired while
+    it waited for a batch slot, so it was *shed at formation time* — it
+    never occupied device capacity. ``ticket.result()`` raises this; the
+    caller distinguishes it from a real failure and may retry with a wider
+    budget."""
+
+    def __init__(self, tenant: str, waited_ms: float, deadline_ms: float):
+        super().__init__(
+            f"tenant {tenant!r} request exceeded its {deadline_ms:.1f}ms "
+            f"deadline after waiting {waited_ms:.1f}ms")
+        self.tenant = tenant
+        self.waited_ms = waited_ms
+        self.deadline_ms = deadline_ms
+
+
+class SchedulerUnhealthy(RuntimeError):
+    """Typed fail-fast: the scheduler is in the ``readonly`` health state (a
+    worker thread died or ``stop()`` ran) and cannot serve — submits are
+    rejected immediately instead of queueing forever against a dead
+    executor, and queued tickets are resolved with this error so no caller
+    blocks on a batch that will never form."""
+
+    def __init__(self, health: str, detail: str = ""):
+        super().__init__(f"scheduler is {health}" +
+                         (f": {detail}" if detail else ""))
+        self.health = health
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker for one executor group: after
+    ``trip_after`` consecutive batch failures it opens (the scheduler flips
+    to ``degraded`` and the owner downshifts the group), and after
+    ``reset_after`` consecutive successes in the degraded configuration it
+    closes again (upshift + back to ``healthy``). Thread-compatible: only
+    ever touched from the executing thread."""
+
+    def __init__(self, trip_after: int = 3, reset_after: int = 4):
+        self.trip_after = max(1, trip_after)
+        self.reset_after = max(1, reset_after)
+        self.failures = 0
+        self.successes = 0
+        self.open = False
+        self.trips = 0
+
+    def record_failure(self) -> bool:
+        """Count one batch failure; True when this failure trips the
+        breaker open."""
+        self.successes = 0
+        self.failures += 1
+        if not self.open and self.failures >= self.trip_after:
+            self.open = True
+            self.trips += 1
+            return True
+        return False
+
+    def record_success(self) -> bool:
+        """Count one healthy batch; True when this success closes an open
+        breaker."""
+        self.failures = 0
+        if not self.open:
+            return False
+        self.successes += 1
+        if self.successes >= self.reset_after:
+            self.open = False
+            self.successes = 0
+            return True
+        return False
+
+
 @dataclass
 class SchedulerConfig:
     """Flush policy + admission limits for :class:`ContinuousScheduler`.
@@ -81,13 +152,23 @@ class SchedulerConfig:
     online from the service times it observes: waiting longer than one
     batch-service interval buys no extra batching, so the effective wait
     tracks an EWMA of the service time, clamped to
-    [``min_wait_ms``, the configured ``max_wait_ms`` SLO]."""
+    [``min_wait_ms``, the configured ``max_wait_ms`` SLO].
+
+    ``deadline_ms`` is the default per-request completion budget (None =
+    no deadline): a request still queued past it is shed with a typed
+    :class:`DeadlineExceeded` at batch-formation time instead of occupying
+    a slot. ``breaker_trip_after``/``breaker_reset_after`` configure the
+    consecutive-failure :class:`CircuitBreaker` that drives the
+    ``healthy → degraded`` downshift."""
     max_batch: int = 32
     max_wait_ms: float = 4.0
     queue_capacity: int = 256
     tenant_weights: Dict[str, float] = field(default_factory=dict)
     adaptive: bool = False
     min_wait_ms: float = 0.5
+    deadline_ms: Optional[float] = None
+    breaker_trip_after: int = 3
+    breaker_reset_after: int = 4
 
 
 class ServingTicket:
@@ -98,20 +179,39 @@ class ServingTicket:
     — their difference is the coordinated-omission-safe serving latency."""
 
     __slots__ = ("tenant", "t_arrival", "t_done", "batch_size", "flush",
-                 "_event", "_result", "_exc")
+                 "t_deadline", "_event", "_result", "_exc", "_cancelled")
 
-    def __init__(self, tenant: str, t_arrival: float):
+    def __init__(self, tenant: str, t_arrival: float,
+                 t_deadline: Optional[float] = None):
         self.tenant = tenant
         self.t_arrival = t_arrival
+        self.t_deadline = t_deadline     # absolute scheduler-clock budget
         self.t_done: Optional[float] = None
         self.batch_size = 0
         self.flush = ""                  # "size" | "deadline" | "drain"
         self._event = threading.Event()
         self._result = None
         self._exc: Optional[BaseException] = None
+        self._cancelled = False
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def cancel(self) -> bool:
+        """Abandon this request: the scheduler drops it at the next batch
+        formation (its queue slot frees, ``_pending`` is released) instead
+        of counting it forever — the fix for ``result(timeout)`` timing out
+        and leaking the slot. Returns False when the request already
+        resolved (it may still be executed if a batch already claimed it);
+        cancelling is idempotent."""
+        if self._event.is_set():
+            return False
+        self._cancelled = True
+        return True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
 
     def result(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
@@ -151,6 +251,10 @@ class ServingMetrics:
         self.max_batch = max_batch
         self.clock = clock or time.perf_counter
         self._lock = threading.Lock()
+        # health is scheduler *state*, not a window counter: it survives
+        # snapshot(reset=True) and only the scheduler's state machine
+        # (healthy → degraded → readonly) moves it
+        self.health = "healthy"
         self._reset_locked(self.clock())
 
     def _reset_locked(self, now: float) -> None:
@@ -158,6 +262,11 @@ class ServingMetrics:
         self.submitted = 0
         self.completed = 0
         self.rejected = 0
+        self.expired = 0                 # deadline-shed (DeadlineExceeded)
+        self.cancelled = 0               # caller-abandoned tickets reaped
+        self.failed = 0                  # requests resolved with a failure
+        self.degrades = 0                # breaker trips this window
+        self.recoveries = 0              # breaker closes this window
         self.latencies_s: List[float] = []
         self.queue_waits_s: List[float] = []
         self.batch_sizes: List[int] = []
@@ -170,6 +279,26 @@ class ServingMetrics:
     def record_shed(self) -> None:
         with self._lock:
             self.rejected += 1
+
+    def record_expired(self, n: int = 1) -> None:
+        with self._lock:
+            self.expired += n
+
+    def record_cancelled(self, n: int = 1) -> None:
+        with self._lock:
+            self.cancelled += n
+
+    def record_failed(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += n
+
+    def record_health(self, health: str, transition: str = "") -> None:
+        with self._lock:
+            self.health = health
+            if transition == "degrade":
+                self.degrades += 1
+            elif transition == "recover":
+                self.recoveries += 1
 
     def record_batch(self, tickets: Sequence[ServingTicket],
                      queue_waits_s: Sequence[float],
@@ -203,9 +332,15 @@ class ServingMetrics:
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "rejected": self.rejected,
+                "expired": self.expired,
+                "cancelled": self.cancelled,
+                "failed": self.failed,
+                "health": self.health,
+                "degrades": self.degrades,
+                "recoveries": self.recoveries,
                 "qps": self.completed / window_s,
-                "shed_rate": self.rejected / max(self.submitted
-                                                 + self.rejected, 1),
+                "shed_rate": ((self.rejected + self.expired)
+                              / max(self.submitted + self.rejected, 1)),
                 "batches": len(self.batch_sizes),
                 "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
                 "occupancy": (float(sizes.mean()) / self.max_batch
@@ -291,18 +426,93 @@ class ContinuousScheduler:
         self._staged: "queue.Queue" = queue.Queue(maxsize=1)
         self._collector: Optional[threading.Thread] = None
         self._executor: Optional[threading.Thread] = None
+        self._executing: Optional[List[_Request]] = None
+        self._collecting: Optional[List[_Request]] = None
+        # Health state machine: healthy → degraded (breaker open, the owner
+        # downshifted the executor group) → back to healthy on breaker
+        # close; readonly is terminal within a scheduler lifetime (a worker
+        # thread died — submits fail fast with SchedulerUnhealthy).
+        self.health = "healthy"
+        self.breaker = CircuitBreaker(self.cfg.breaker_trip_after,
+                                      self.cfg.breaker_reset_after)
+        # downshift/upshift hooks, set by the owner (e.g. ScheduledDSQ's
+        # degradation ladder); called on the executing thread, never under
+        # the admission lock
+        self.on_degrade: Optional[Callable[[], None]] = None
+        self.on_recover: Optional[Callable[[], None]] = None
+        self.last_batch_error: Optional[BaseException] = None
+        self.stage_faults = 0            # staging failures absorbed
+
+    # ---------------------------------------------------------------- health
+    def _set_health(self, health: str, transition: str = "") -> None:
+        self.health = health
+        self.metrics.record_health(health, transition)
+
+    def _fail_fast(self, detail: str,
+                   executing: Optional[List[_Request]] = None) -> None:
+        """A worker thread is dying: flip to ``readonly`` and resolve every
+        queued request with a typed :class:`SchedulerUnhealthy` so no caller
+        blocks forever on a batch that will never form. ``executing`` is the
+        batch the dying executor thread was running (its requests left the
+        queues already, so the sweep below cannot see them)."""
+        err = SchedulerUnhealthy("readonly", detail)
+        with self._cond:
+            self._set_health("readonly")
+            doomed = []
+            for q in self._queues.values():
+                doomed.extend(q)
+                q.clear()
+            self._pending -= len(doomed)
+            if executing:
+                self._inflight -= len(executing)
+            self._cond.notify_all()
+        for r in executing or ():
+            if not r.ticket.done():
+                r.ticket._resolve(None, err)
+        for r in doomed:
+            r.ticket._resolve(None, err)
+        # a staged batch nobody will ever execute (executor death) would
+        # strand its tickets AND deadlock stop()'s sentinel put on the
+        # 1-slot queue — resolve and drop it
+        staged_doomed = 0
+        while True:
+            try:
+                item = self._staged.get_nowait()
+            except queue.Empty:
+                break
+            if item is None:
+                continue
+            for r in item[0]:
+                r.ticket._resolve(None, err)
+            staged_doomed += len(item[0])
+        if staged_doomed:
+            with self._cond:
+                self._inflight -= staged_doomed
+                self._cond.notify_all()
+        self.metrics.record_failed(len(doomed) + staged_doomed
+                                   + len(executing or ()))
 
     # ------------------------------------------------------------- admission
     def submit(self, payload, tenant: str = "default",
-               t_arrival: Optional[float] = None) -> ServingTicket:
+               t_arrival: Optional[float] = None,
+               deadline_ms: Optional[float] = None) -> ServingTicket:
         """Admit one request; returns its await ticket. Raises
         :class:`AdmissionError` when the tenant's queue is at capacity (the
-        request is not enqueued). ``t_arrival`` lets an open-loop driver
-        backdate to the *scheduled* arrival time so queueing delay the
-        driver itself introduced still counts — the coordinated-omission
-        guard."""
+        request is not enqueued) and :class:`SchedulerUnhealthy` when a
+        worker thread has died (fail fast — nothing would ever serve it).
+        ``t_arrival`` lets an open-loop driver backdate to the *scheduled*
+        arrival time so queueing delay the driver itself introduced still
+        counts — the coordinated-omission guard. ``deadline_ms`` (default
+        ``cfg.deadline_ms``) is the request's completion budget from
+        arrival: still queued past it, it resolves with a typed
+        :class:`DeadlineExceeded` instead of occupying a batch slot."""
         now = self.clock()
+        if deadline_ms is None:
+            deadline_ms = self.cfg.deadline_ms
         with self._cond:
+            if self.health == "readonly":
+                self.metrics.record_shed()
+                raise SchedulerUnhealthy(self.health, "worker thread dead")
             q = self._queues.get(tenant)
             if q is None:
                 q = self._queues[tenant] = deque()
@@ -310,8 +520,11 @@ class ContinuousScheduler:
             if len(q) >= self.cfg.queue_capacity:
                 self.metrics.record_shed()
                 raise AdmissionError(tenant, len(q), self.cfg.queue_capacity)
-            ticket = ServingTicket(tenant,
-                                   now if t_arrival is None else t_arrival)
+            arrival = now if t_arrival is None else t_arrival
+            ticket = ServingTicket(
+                tenant, arrival,
+                None if deadline_ms is None
+                else arrival + deadline_ms / 1e3)
             q.append(_Request(self._seq, tenant, payload, ticket.t_arrival,
                               ticket))
             self._seq += 1
@@ -339,6 +552,43 @@ class ContinuousScheduler:
             return "deadline"
         return None
 
+    def _reap_locked(self) -> List[Tuple[_Request, float]]:
+        """Drop cancelled and deadline-expired requests from the admission
+        queues (releasing their ``_pending`` slots) before a batch forms, so
+        neither occupies device capacity. Returns the expired requests (with
+        their waited seconds) for the caller to resolve with
+        :class:`DeadlineExceeded`. Call under the lock."""
+        now = self.clock()
+        expired: List[Tuple[_Request, float]] = []
+        dropped = 0
+        for q in self._queues.values():
+            if not q:
+                continue
+            keep = []
+            for r in q:
+                if r.ticket._cancelled:
+                    dropped += 1
+                elif (r.ticket.t_deadline is not None
+                      and now >= r.ticket.t_deadline):
+                    expired.append((r, now - r.t_arrival))
+                else:
+                    keep.append(r)
+            if len(keep) != len(q):
+                q.clear()
+                q.extend(keep)
+        self._pending -= dropped + len(expired)
+        if dropped:
+            self.metrics.record_cancelled(dropped)
+        if expired:
+            self.metrics.record_expired(len(expired))
+        return expired
+
+    def _resolve_expired(self, expired: List[Tuple[_Request, float]]) -> None:
+        for r, waited_s in expired:
+            dl = r.ticket.t_deadline
+            r.ticket._resolve(None, DeadlineExceeded(
+                r.tenant, waited_s * 1e3, (dl - r.t_arrival) * 1e3))
+
     def _form_batch(self) -> List[_Request]:
         """Drain up to ``max_batch`` requests weighted-fair across tenants:
         each active tenant first gets a slot share proportional to its
@@ -347,6 +597,7 @@ class ContinuousScheduler:
         batch is exactly the FIFO prefix — what makes scheduled results
         reproducible against a direct ``dsq_batch`` of the same requests.
         Call under the lock."""
+        self._resolve_expired(self._reap_locked())
         active = [t for t in self._rr if self._queues[t]]
         if not active:
             return []
@@ -380,25 +631,50 @@ class ContinuousScheduler:
         if self.stage_fn is None:
             return None, 0.0
         t0 = self.clock()
-        staged = self.stage_fn([r.payload for r in batch])
+        try:
+            faults.fire("sched.stage")
+            staged = self.stage_fn([r.payload for r in batch])
+        except Exception:                # noqa: BLE001 — staging only warms
+            # token-validated caches: a failed stage costs performance, not
+            # correctness. Execute unstaged rather than killing the batch
+            # (or, threaded, the collector thread).
+            self.stage_faults += 1
+            return None, self.clock() - t0
         return staged, self.clock() - t0
 
     def _run_batch(self, batch: List[_Request], staged, stage_s: float,
                    flush: str) -> None:
         t0 = self.clock()
         try:
+            # Seam: "latency" = injected kernel slowness, "error" = executor
+            # exception (fans out to the batch's tickets, counts toward the
+            # breaker), "crash" = thread death (InjectedCrash is a
+            # BaseException, so it escapes this handler by design).
+            faults.fire("sched.execute")
             results = self.execute_fn([r.payload for r in batch], staged)
             if len(results) != len(batch):
                 raise RuntimeError(f"execute returned {len(results)} results "
                                    f"for {len(batch)} requests")
-        except BaseException as e:          # noqa: BLE001 — fan the failure out
+        except Exception as e:     # KeyboardInterrupt/SystemExit propagate
+            self.last_batch_error = e
             for r in batch:
                 r.ticket._resolve(None, e)
+            self.metrics.record_failed(len(batch))
             with self._cond:
                 self._inflight -= len(batch)
                 self._cond.notify_all()
+            if self.breaker.record_failure() and self.health == "healthy":
+                # trip: downshift the executor group, serve degraded
+                self._set_health("degraded", "degrade")
+                if self.on_degrade is not None:
+                    self.on_degrade()
             return
         t1 = self.clock()
+        if self.breaker.record_success() and self.health == "degraded":
+            # sustained success in the degraded configuration: upshift
+            self._set_health("healthy", "recover")
+            if self.on_recover is not None:
+                self.on_recover()
         if self.cfg.adaptive:
             ewma = self._service_ewma_s
             self._service_ewma_s = (0.2 * (t1 - t0) + 0.8 * ewma
@@ -473,7 +749,9 @@ class ContinuousScheduler:
                 self._maint_cost_ewma_s = (dt if not self._maint_cost_ewma_s
                                            else 0.7 * self._maint_cost_ewma_s
                                            + 0.3 * dt)
-        except BaseException as e:          # noqa: BLE001 — keep serving
+        except Exception as e:              # keep serving; a crash-kind
+            # injected fault (InjectedCrash is a BaseException) or a real
+            # KeyboardInterrupt/SystemExit must propagate instead
             self.maintenance_error = e
             self.maintenance_fn = None
         finally:
@@ -481,10 +759,29 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------ thread pair
     def _collect_loop(self) -> None:
+        # The loop body catches nothing below Exception on purpose
+        # (satellite of the chaos PR): an escaping exception IS thread
+        # death — flip to readonly so submits fail fast and queued callers
+        # get a typed error instead of the scheduler silently going dark.
+        # KeyboardInterrupt/SystemExit still propagate after the flip.
+        try:
+            self._collect_body()
+        except faults.InjectedCrash:
+            self._fail_fast("collector thread died (injected crash)",
+                            executing=self._collecting)
+        except BaseException:
+            self._fail_fast("collector thread died",
+                            executing=self._collecting)
+            raise
+
+    def _collect_body(self) -> None:
         while True:
             with self._cond:
-                while self._running and self._pending == 0:
+                while (self._running and self._pending == 0
+                       and self.health != "readonly"):
                     self._cond.wait()
+                if self.health == "readonly":
+                    break                # executor died: nothing to feed
                 if not self._running and self._pending == 0:
                     break
                 flush = None
@@ -503,12 +800,43 @@ class ContinuousScheduler:
                 batch = self._form_batch()   # stop(): drain what remains
                 flush = flush or "drain"
             if batch:
+                self._collecting = batch  # for fail-fast resolution on death
+                faults.fire("sched.collect")
                 staged, stage_s = self._do_stage(batch)
                 # blocks while one batch is already staged and one executes:
-                # exactly one batch of lookahead — the double buffer
-                self._staged.put((batch, staged, stage_s, flush))
+                # exactly one batch of lookahead — the double buffer. The
+                # put is health-aware: an executor that died mid-wait would
+                # otherwise leave us blocked on a queue nobody drains.
+                while True:
+                    try:
+                        self._staged.put((batch, staged, stage_s, flush),
+                                         timeout=0.05)
+                        self._collecting = None
+                        break
+                    except queue.Full:
+                        if self.health == "readonly":
+                            err = SchedulerUnhealthy(
+                                "readonly", "executor thread dead")
+                            for r in batch:
+                                r.ticket._resolve(None, err)
+                            self.metrics.record_failed(len(batch))
+                            with self._cond:
+                                self._inflight -= len(batch)
+                                self._cond.notify_all()
+                            return
 
     def _execute_loop(self) -> None:
+        try:
+            self._execute_body()
+        except faults.InjectedCrash:
+            self._fail_fast("executor thread died (injected crash)",
+                            executing=self._executing)
+        except BaseException:
+            self._fail_fast("executor thread died",
+                            executing=self._executing)
+            raise
+
+    def _execute_body(self) -> None:
         while True:
             if self.maintenance_fn is not None:
                 try:
@@ -526,7 +854,9 @@ class ContinuousScheduler:
                 item = self._staged.get()
             if item is None:
                 break
+            self._executing = item[0]    # for fail-fast resolution on death
             self._run_batch(*item)
+            self._executing = None
             self._since_maintenance += 1
             self._maybe_maintain(busy=not self._staged.empty())
 
@@ -551,6 +881,11 @@ class ContinuousScheduler:
         if self._collector is not None:
             self._collector.join()
             self._collector = None
+        if self.health == "readonly":
+            # a worker died: resolve anything stranded between the
+            # fail-fast sweep and the collector's exit so the sentinel
+            # put below cannot block on a full queue nobody drains
+            self._fail_fast("stopped while readonly")
         self._staged.put(None)
         if self._executor is not None:
             self._executor.join()
@@ -634,12 +969,26 @@ class ScheduledDSQ:
                  rescore_k: Optional[int] = None, use_pallas: bool = False,
                  cfg: Optional[SchedulerConfig] = None,
                  stage: bool = True, maintenance: object = None,
-                 maintenance_every: int = 8):
+                 maintenance_every: int = 8, degrade: bool = True,
+                 **executor_params):
         """``maintenance=True`` attaches the db's
         :class:`~repro.vectordb.maintenance.MaintenanceManager` for
         ``namespace`` as the scheduler's between-batches hook; passing a
         manager (or any ``step``-bearing object / zero-arg callable) uses
-        that instead."""
+        that instead.
+
+        ``degrade=True`` arms the degradation ladder: when the scheduler's
+        circuit breaker trips (consecutive batch failures), the serving
+        configuration downshifts — ``sharded`` falls back to ``flat``
+        (bit-identical results, no mesh staging on the faulting H2D path),
+        ``fp32`` falls back to the two-phase ``int8`` plan, and the
+        approximate executors' search budgets shrink (IVF ``nprobe``
+        halves, PG ``ef_search`` halves) — every step recall-clamped
+        through the cost model's floors (``pick_rescore_k``'s rescore
+        factor, ``default_nprobe``, ``ef >= 2k``), so a degraded answer is
+        a narrower search, never an unclamped one. When the breaker closes
+        the original configuration is restored. ``executor_params`` are
+        forwarded to ``dsq_batch`` (e.g. ``nprobe=…``, ``ef_search=…``)."""
         self.db = db
         self.k = k
         self.namespace = namespace
@@ -647,6 +996,13 @@ class ScheduledDSQ:
         self.precision = precision
         self.rescore_k = rescore_k
         self.use_pallas = use_pallas
+        self.executor_params = dict(executor_params)
+        # original (healthy) configuration, restored on breaker close
+        self._healthy_cfg = (executor, precision, rescore_k,
+                             dict(executor_params))
+        self._cfg_lock = threading.Lock()
+        self.degrade_enabled = degrade
+        self.degrade_level = 0
         if cfg is None:
             # a measured cost model sizes the batch at the knee of its
             # calibrated service-time curve (and turns on adaptive wait);
@@ -666,11 +1022,55 @@ class ScheduledDSQ:
             acct_of=lambda results: results[0].batch if results else None,
             maintenance=maintenance,
             maintenance_every=maintenance_every)
+        if degrade:
+            self.scheduler.on_degrade = self._downshift
+            self.scheduler.on_recover = self._upshift
+
+    # ------------------------------------------------------ degradation ladder
+    def _downshift(self) -> None:
+        """Breaker tripped: move one rung down the ladder (executing
+        thread). Each rung is recall-clamped — see ``__init__``."""
+        from ..vectordb.costmodel import model_of
+        with self._cfg_lock:
+            model = model_of(self.db.store)
+            if self.executor == "sharded" and "flat" in self.db.executors:
+                self.executor = "flat"
+            if self.precision == "fp32":
+                # two-phase int8: ~4x fewer scan bytes; the rescore window
+                # stays at the model's recall-gated floor (pick_rescore_k
+                # never narrows below DEFAULT_RESCORE_FACTOR * k)
+                self.precision = "int8"
+                self.rescore_k = model.pick_rescore_k(
+                    self.k, self.rescore_k, len(self.db.store))
+            if self.executor == "ivf":
+                ex = self.db.executors.get("ivf")
+                n_lists = getattr(ex, "n_lists", 0)
+                if n_lists:
+                    floor = model.default_nprobe(n_lists)
+                    cur = self.executor_params.get("nprobe", floor)
+                    self.executor_params["nprobe"] = max(floor, cur // 2)
+            if self.executor == "pg":
+                cur = self.executor_params.get("ef_search", 64)
+                self.executor_params["ef_search"] = max(2 * self.k, cur // 2)
+            self.degrade_level += 1
+
+    def _upshift(self) -> None:
+        """Breaker closed after sustained degraded success: restore the
+        healthy configuration."""
+        with self._cfg_lock:
+            (self.executor, self.precision, self.rescore_k,
+             params) = self._healthy_cfg
+            self.executor_params = dict(params)
+            self.degrade_level = 0
 
     # scheduler surface, re-exported for callers
     @property
     def metrics(self) -> ServingMetrics:
         return self.scheduler.metrics
+
+    @property
+    def health(self) -> str:
+        return self.scheduler.health
 
     def start(self) -> "ScheduledDSQ":
         self.scheduler.start()
@@ -691,24 +1091,33 @@ class ScheduledDSQ:
 
     def submit(self, query: np.ndarray, path: str, recursive: bool = True,
                exclude: Sequence[str] = (), tenant: str = "default",
-               t_arrival: Optional[float] = None) -> ServingTicket:
+               t_arrival: Optional[float] = None,
+               deadline_ms: Optional[float] = None) -> ServingTicket:
         payload = (np.asarray(query, np.float32), path, bool(recursive),
                    tuple(exclude or ()))
         return self.scheduler.submit(payload, tenant=tenant,
-                                     t_arrival=t_arrival)
+                                     t_arrival=t_arrival,
+                                     deadline_ms=deadline_ms)
 
     def _stage(self, payloads: List[Tuple]) -> object:
+        with self._cfg_lock:
+            executor = self.executor
         return stage_dsq(self.db, payloads, self.k, self.namespace,
-                         self.executor)
+                         executor)
 
     def _execute(self, payloads: List[Tuple], staged) -> List:
         queries, paths, rec, exc = assemble_dsq(payloads)
+        with self._cfg_lock:
+            # snapshot the (possibly downshifted) serving configuration so
+            # one batch executes one coherent rung of the ladder
+            executor, precision = self.executor, self.precision
+            rescore_k, params = self.rescore_k, dict(self.executor_params)
         return self.db.dsq_batch(queries, paths, k=self.k, recursive=rec,
                                  exclude=exc, namespace=self.namespace,
-                                 executor=self.executor,
+                                 executor=executor,
                                  use_pallas=self.use_pallas,
-                                 precision=self.precision,
-                                 rescore_k=self.rescore_k)
+                                 precision=precision,
+                                 rescore_k=rescore_k, **params)
 
 
 def open_loop_arrivals(qps: float, n: int, seed: int = 0) -> np.ndarray:

@@ -400,6 +400,7 @@ class DirectoryVectorDB:
         out_scores = np.full((B, k), -np.inf, np.float32)
         out_ids = np.full((B, k), -1, np.int64)
         fetch0 = self.store.rescore_fetch_bytes
+        retries0 = self.store.host_fetch_retries
         launch(groups, out_scores, out_ids, acct)
         acct.ann_ns = time.perf_counter_ns() - t1
         # resident-store byte terms are *alive-row* bytes: tombstoned rows
@@ -411,6 +412,7 @@ class DirectoryVectorDB:
             acct.db_bytes_fp32 = self.store.alive_nbytes()
             acct.db_bytes_pq = self.store.pq_nbytes()
         acct.rescore_fetch_bytes = self.store.rescore_fetch_bytes - fetch0
+        acct.host_fetch_retries = self.store.host_fetch_retries - retries0
         acct.tiered = self.store.tiered_active()
         if acct.tiered:
             self._update_hot_pins(namespace, groups)

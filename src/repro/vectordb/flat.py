@@ -245,7 +245,7 @@ def gather_rescore(store: VectorStore, queries: np.ndarray,
         n_fetch = int(np.count_nonzero(fetch))
         store.rescore_fetch_rows += n_fetch
         store.rescore_fetch_bytes += n_fetch * store.dim * 4
-    rows = store.vectors[np.maximum(cand_ids, 0)]            # (B, R, d)
+    rows = store.fetch_rows(np.maximum(cand_ids, 0))         # (B, R, d)
     kk = min(k, cand_ids.shape[1])
     vals, loc = _rescore_topk(jnp.asarray(queries), jnp.asarray(rows),
                               jnp.asarray(cand_ids >= 0), kk, store.metric)

@@ -46,6 +46,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .. import faults
 from ..core import DSM
 from .graph import PGIndex
 from .ivf import IVFIndex
@@ -247,6 +248,9 @@ class MaintenanceManager:
         token = ex.locks.acquire(op.affected_region())
         try:
             seq = ex.journal.begin(op)
+            # Kill point: intent durable, mutation not yet applied — the
+            # crash window recovery's gen-counter probe must roll forward.
+            faults.fire("maint.apply")
             try:
                 result = self._apply(op)
             except Exception:

@@ -325,6 +325,9 @@ class BatchAccounting:
     rescore_fetch_bytes: int = 0     # host->device fp32 row fetch traffic
     rows_device_pinned: int = 0      # alive rows pinned device-resident
     rows_host: int = 0               # alive rows resident in host RAM only
+    # fault-tolerance terms (zero on clean runs): transient host-fetch
+    # faults absorbed by the store's bounded retry-with-backoff this batch
+    host_fetch_retries: int = 0      # store.host_fetch transient retries
     # continuous-batching scheduler terms (zero on direct dsq_batch calls):
     # where this batch sat in the serving pipeline. Arrival is the earliest
     # admission timestamp in the batch; queue is the summed admission-queue

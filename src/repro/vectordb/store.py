@@ -12,6 +12,7 @@ sharded scan ANDs in-register.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional, Tuple
 
 import numpy as np
@@ -19,6 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import faults
 from .quant import PQCodebook, quantize_rows
 
 METRICS = ("ip", "l2", "cos")
@@ -128,6 +130,11 @@ class VectorStore:
         self._pinned: Optional[np.ndarray] = None
         self.rescore_fetch_bytes = 0
         self.rescore_fetch_rows = 0
+        # Host-fetch fault handling: transient faults at the
+        # ``store.host_fetch`` seam are retried with exponential backoff
+        # (bounded), counted here and surfaced through BatchAccounting.
+        self.host_fetch_retries = 0
+        self.host_fetch_failures = 0
         # Tombstones: rows are append-only, so a delete marks the id dead
         # here and every executor consults the alive mask at query time
         # (scoped searches drop deleted ids via the directory layer already;
@@ -509,6 +516,37 @@ class VectorStore:
         pinned = int(np.count_nonzero(pm & ~self._deleted[: self._n]))
         return pinned, alive - pinned
 
+    #: bounded-retry policy for transient host-fetch faults (a stalled or
+    #: flaky host-RAM/disk read in the tiered store): up to FETCH_RETRIES
+    #: re-attempts with exponential backoff starting at FETCH_BACKOFF_S.
+    FETCH_RETRIES = 3
+    FETCH_BACKOFF_S = 1e-3
+
+    def fetch_rows(self, row_ids: np.ndarray) -> np.ndarray:
+        """Gather exact fp32 rows by store id — the host-row fetch behind
+        every ``gather_rescore`` window. In a tiered store this is the I/O
+        edge (host RAM today, mmap/disk later), so it carries the
+        ``store.host_fetch`` fault seam: transient faults are retried with
+        exponential backoff up to :data:`FETCH_RETRIES` times (counted in
+        ``host_fetch_retries``); exhaustion or a non-transient fault
+        escalates to the caller, where the scheduler's degradation ladder
+        takes over."""
+        attempt = 0
+        while True:
+            try:
+                faults.fire("store.host_fetch")
+                return self.vectors[row_ids]
+            except faults.TransientFault:
+                if attempt >= self.FETCH_RETRIES:
+                    self.host_fetch_failures += 1
+                    raise faults.FaultError(
+                        "store.host_fetch",
+                        f"transient fault persisted past "
+                        f"{self.FETCH_RETRIES} retries") from None
+                time.sleep(self.FETCH_BACKOFF_S * (2 ** attempt))
+                attempt += 1
+                self.host_fetch_retries += 1
+
     # -------------------------------------------------------------- bytes
     def alive_count(self) -> int:
         return self._n - self._n_deleted
@@ -612,6 +650,11 @@ class ShardedStoreView:
         padded capacity changed (a full re-shard: device-resident masks
         derived from the old capacity are invalid and must be rebuilt)."""
         n = len(self.store)
+        # Seam: the mesh H2D staging edge — a transient fault here models a
+        # stalled/failed device transfer; sync callers (staging, the sharded
+        # launch) surface it to the scheduler's degradation ladder, which
+        # downshifts the group to the flat executor.
+        faults.fire("sharded.h2d")
         if self._compact_gen != self.store.compact_gen:
             # the store compacted underneath us without apply_remap (no
             # maintenance manager attached): every mirror row moved, so

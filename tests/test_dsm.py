@@ -657,3 +657,147 @@ def test_pg_built_empty_then_ingested():
     db.ingest(vecs, ["/x/"] * 20)
     r = db.dsq(vecs[5], "/x/", k=3, executor="pg", ef_search=16)
     assert 5 in r.ids[0].tolist()
+
+
+# --------------------------------------------- injected journal write faults
+# Satellite of the chaos PR: the kill-point matrix above models clean
+# process death; these model *partial* failures of the journal write itself
+# (short write / ENOSPC / fsync failure) at every DSM op kind, in both
+# phases (BEGIN write / COMMIT write). Recovery must land bit-identical to
+# the twin implied by what actually reached the disk:
+#   short_write/enospc at BEGIN  -> intent not durable -> op never happened
+#   fsync-fault at BEGIN         -> record IS on disk  -> rolled forward
+#   any fault at COMMIT          -> mutation ran, COMMIT lost -> idempotent
+from repro import faults as F  # noqa: E402
+
+
+def _apply_workload(ex, ops):
+    for op in ops:
+        try:
+            ex.apply(op)
+        except (KeyError, ValueError):
+            pass
+
+
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+@pytest.mark.parametrize("fault", ["short_write", "enospc", "fsync"])
+@pytest.mark.parametrize("phase", ["begin", "commit"])
+def test_recovery_under_injected_journal_faults(strategy, fault, phase,
+                                                tmp_path):
+    ops = _crash_workload()
+    probes = ["/", "/t0/", "/t1/", "/t2/", "/t1/d0/", "/t2/d0/", "/t2/d1/",
+              "/t1/new/", "/t2/d1/t0/"]
+    for kill in range(len(ops)):
+        jp = str(tmp_path / f"{strategy}-{fault}-{phase}-{kill}.journal")
+        idx = make_scope_index(strategy)
+        for eid in range(30):
+            idx.insert(eid, f"/t{eid % 3}/d{eid % 2}/x{eid % 2}/"
+                       if eid % 5 == 0 else f"/t{eid % 3}/d{eid % 2}/")
+        ex = DSMExecutor(idx, DSMJournal(jp, fsync_on_commit=True))
+        _apply_workload(ex, ops[:kill])
+
+        seam = "journal.fsync" if fault == "fsync" else "journal.write"
+        kind = "error" if fault == "fsync" else fault
+        # phase targets the op's first (BEGIN) or second (COMMIT/ABORT)
+        # journal interaction
+        plan = F.FaultPlan().add(seam, kind=kind, after=0 if phase == "begin"
+                                 else 1)
+        faulted = False
+        with F.FaultInjector(plan) as inj:
+            try:
+                ex.apply(ops[kill])
+            except (KeyError, ValueError):
+                pass                      # op invalid; fault may not trip
+            except (F.FaultError, F.InjectedCrash, OSError):
+                faulted = True
+        # restart over the restored index state
+        ex2 = DSMExecutor(idx, DSMJournal(jp, fsync_on_commit=True))
+        ex2.recover()
+
+        # twin: which prefix of the workload should the state reflect?
+        durable = kill + 1
+        if faulted and phase == "begin" and fault in ("short_write",
+                                                      "enospc"):
+            durable = kill               # intent never became durable
+        twin = make_scope_index(strategy)
+        for eid in range(30):
+            twin.insert(eid, f"/t{eid % 3}/d{eid % 2}/x{eid % 2}/"
+                        if eid % 5 == 0 else f"/t{eid % 3}/d{eid % 2}/")
+        for op in ops[:durable]:
+            try:
+                op.apply(twin)
+            except (KeyError, ValueError):
+                pass
+        for probe in probes:
+            for rec in (True, False):
+                got = set(idx.resolve(probe, recursive=rec)
+                          .to_array().tolist())
+                want = set(twin.resolve(probe, recursive=rec)
+                           .to_array().tolist())
+                assert got == want, (strategy, fault, phase, kill, probe,
+                                     rec, inj.trips)
+        assert ex2.recover() == []       # replay fully resolved
+
+
+# ------------------------------------------------- compaction kill points
+def _journal_with_history(jp, pending_op=True):
+    j = DSMJournal(jp, auto_compact_every=0)   # no auto-compact
+    s0 = j.begin(DSM("mkdir", "/a/"))
+    j.commit(s0)
+    s1 = j.begin(DSM("move", "/a/", "/b/"))
+    j.abort(s1)
+    if pending_op:
+        j.begin(DSM("merge", "/a/", "/c/"))    # outstanding intent
+    return j
+
+
+def test_compact_crash_before_replace_recovers_from_old_journal(tmp_path):
+    """Kill between writing the compaction tmp and os.replace: the old
+    journal file is still the authority; the stray tmp must be cleaned on
+    reopen and recovery must see the same intents as before the crash."""
+    jp = str(tmp_path / "dsm.journal")
+    j = _journal_with_history(jp)
+    before = j.uncommitted()
+    plan = F.FaultPlan().add("journal.compact.tmp", kind="crash")
+    with F.FaultInjector(plan):
+        with pytest.raises(F.InjectedCrash):
+            j.compact()
+    assert os.path.exists(jp + ".compact"), "crash left the stray tmp"
+
+    j2 = DSMJournal(jp)                        # reopen = restart
+    assert not os.path.exists(jp + ".compact"), "stale tmp cleaned"
+    assert j2.uncommitted() == before
+    # seqs stay monotonic past the crash
+    assert j2.begin(DSM("mkdir", "/d/")) > before[-1][0]
+
+
+def test_compact_crash_after_replace_recovers_from_compacted(tmp_path):
+    """Kill just after os.replace: the compacted file IS the journal; a
+    reopen recovers the identical intent set (plus the seq watermark)."""
+    jp = str(tmp_path / "dsm.journal")
+    j = _journal_with_history(jp)
+    before = j.uncommitted()
+    plan = F.FaultPlan().add("journal.compact.done", kind="crash")
+    with F.FaultInjector(plan):
+        with pytest.raises(F.InjectedCrash):
+            j.compact()
+    assert not os.path.exists(jp + ".compact")
+
+    j2 = DSMJournal(jp)
+    assert j2.uncommitted() == before
+    assert j2.begin(DSM("mkdir", "/d/")) > before[-1][0]
+
+
+def test_compact_to_empty_crash_keeps_seq_watermark(tmp_path):
+    """Crash-after-replace with nothing pending: the watermark record alone
+    must keep reopened seqs monotonic (the reopen-collision guard)."""
+    jp = str(tmp_path / "dsm.journal")
+    j = _journal_with_history(jp, pending_op=False)
+    top = j._seq
+    plan = F.FaultPlan().add("journal.compact.done", kind="crash")
+    with F.FaultInjector(plan):
+        with pytest.raises(F.InjectedCrash):
+            j.compact()
+    j2 = DSMJournal(jp)
+    assert j2.uncommitted() == []
+    assert j2.begin(DSM("mkdir", "/d/")) >= top

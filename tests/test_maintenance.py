@@ -521,3 +521,65 @@ def test_scheduler_survives_maintenance_hook_error(tmp_path):
             break
         s.pump()
     assert f2.result(timeout=5) is not None
+
+
+# --------------------------------------------- injected journal write faults
+# Chaos-PR satellite: partial journal failures (short write / ENOSPC /
+# fsync fault) at every maintenance op kind, in both phases. The twin
+# contract follows what reached the disk:
+#   BEGIN write lost (short_write/enospc) -> op never ran -> twins diverge
+#     only by the op never having happened (db_b equals its own pre-op
+#     state, journal has no suspect);
+#   BEGIN durable but fsync faulted -> rolled forward on recover();
+#   COMMIT write faulted -> mutation ran, gen-counter probe skips reapply.
+from repro import faults as F  # noqa: E402
+
+
+@pytest.mark.parametrize("kind", ["maint_pg_repair", "maint_compact",
+                                  "maint_repartition"])
+@pytest.mark.parametrize("fault", ["short_write", "enospc", "fsync"])
+@pytest.mark.parametrize("phase", ["begin", "commit"])
+def test_maintenance_recovery_under_injected_journal_faults(
+        kind, fault, phase, tmp_path):
+    db_a, ids_a, _ = _mkdb(tmp_path, seed=5, tag="a")
+    db_b, ids_b, _ = _mkdb(tmp_path, seed=5, tag="b")
+    for i in ids_a[:120]:
+        db_a.delete(int(i))
+        db_b.delete(int(i))
+    db_b._dsm["fs"].journal.fsync_on_commit = True
+    mgr_a = db_a.maintenance()
+    mgr_b = db_b.maintenance()
+
+    seam = "journal.fsync" if fault == "fsync" else "journal.write"
+    fkind = "error" if fault == "fsync" else fault
+    plan = F.FaultPlan().add(seam, kind=fkind,
+                             after=0 if phase == "begin" else 1)
+    with F.FaultInjector(plan):
+        with pytest.raises((F.FaultError, F.InjectedCrash, OSError)):
+            mgr_b._run(kind)
+
+    begin_lost = (phase == "begin" and fault in ("short_write", "enospc"))
+    # restart: reopen the journal from disk (the in-memory intent set died
+    # with the "process"; reopen also truncates any torn tail) and recover
+    ex_b = db_b._dsm["fs"]
+    ex_b.journal = DSMJournal(ex_b.journal.path, fsync_on_commit=True)
+    replayed = db_b.recover()
+    if begin_lost:
+        # intent never durable: the op never happened on db_b; run it now
+        # so both twins converge on the same post-op state
+        assert replayed["fs"] == []
+        assert mgr_b.ops_replayed == {}
+        mgr_b._run(kind)
+    elif phase == "begin":
+        # fsync faulted but the BEGIN record is on disk: rolled forward
+        assert [o.kind for o in replayed["fs"]] == [kind]
+        assert mgr_b.ops_replayed == {kind: 1}
+    else:
+        # mutation landed, COMMIT lost: the gen-counter probe must skip
+        # reapply (fsync@commit leaves no suspect at all — the record is
+        # durable — so replay may be empty either way)
+        assert mgr_b.ops_replayed.get(kind, 0) == 0 or fault == "fsync"
+    mgr_a._run(kind)
+    assert mgr_b.stats()["journal_pending"] == 0
+    _assert_same_db_state(db_a, db_b)
+    db_b.check_invariants()
